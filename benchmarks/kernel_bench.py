@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks on this host (CPU): wall time of the jnp DBB
+ops (the dry-run path) and the packed-vs-dense byte ratio they realize.
+Pallas kernels target TPU; interpret-mode timing is not meaningful, so we
+time the jnp implementations that lower to the same HLO structure."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbb
+from repro.kernels import ops
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_dbb_matmul():
+    cfg = dbb.DBBConfig(4, 8)
+    m, k, n = 256, 1024, 1024
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(k, n)).astype(np.float32))
+    wv, wm = ops.pack_weight(w, cfg)
+    f_dense = jax.jit(lambda a, b: a @ b)
+    f_dbb = jax.jit(lambda a, v, mk: ops.dbb_matmul(a, v, mk, cfg, impl="jnp"))
+    us_dense = _time(f_dense, x, w)
+    us_dbb = _time(f_dbb, x, wv, wm)
+    dense_bytes = w.size * 4
+    packed_bytes = wv.size * 4 + wm.size
+    rows = [
+        {"impl": "dense", "us": round(us_dense, 1)},
+        {"impl": "dbb_jnp", "us": round(us_dbb, 1)},
+        {"weight_bytes_ratio": round(dense_bytes / packed_bytes, 3)},
+    ]
+    return rows, round(dense_bytes / packed_bytes, 3)
+
+
+def bench_dap_prune():
+    x = jnp.asarray(
+        np.random.default_rng(2).normal(size=(512, 4096)).astype(np.float32)
+    )
+    f = jax.jit(lambda a: ops.dap_prune(a, 4, 8, impl="jnp"))
+    us = _time(f, x)
+    pruned, mask = f(x)
+    density = float(jnp.mean((pruned != 0).astype(jnp.float32)))
+    rows = [{"us": round(us, 1), "post_density": round(density, 3)}]
+    return rows, round(density, 3)

@@ -1,0 +1,220 @@
+"""Analytical-model benchmarks — one function per S2TA paper table/figure.
+
+Each returns (rows, derived) where rows are printable dicts and derived is
+the headline scalar for the CSV emitted by benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+from repro.perfmodel import s2ta
+from repro.perfmodel.workloads import MODELS, typical_conv
+
+
+def fig1_energy_breakdown():
+    """Fig. 1: dense INT8 SA energy split — buffers dominate, MAC ~20%."""
+    bd = s2ta.model_breakdown("sa", typical_conv(0.5, 0.5))
+    total = sum(bd.values())
+    rows = [
+        {"component": k, "power_mw": round(v, 1), "frac": round(v / total, 3)}
+        for k, v in bd.items()
+    ]
+    return rows, bd["mac"] / total  # ~0.20
+
+
+def fig3_smt_overhead():
+    """Fig. 3: SMT achieves speedup but worse energy than SA-ZVCG."""
+    t = typical_conv(0.5, 0.5)
+    rows = []
+    base = s2ta.run_layer("sa_zvcg", t)
+    for d, kw in [("sa", {}), ("sa_zvcg", {}), ("sa_smt", {"q": 2}), ("sa_smt", {"q": 4})]:
+        r = s2ta.run_layer(d, t, **kw)
+        rows.append(
+            {
+                "design": r.design,
+                "speedup": round(r.speedup, 2),
+                "energy_vs_zvcg": round(
+                    (r.power_mw * r.time_s) / (base.power_mw * base.time_s), 3
+                ),
+            }
+        )
+    smt = [r for r in rows if "SMT" in r["design"]][0]
+    return rows, smt["energy_vs_zvcg"]  # >1: overhead eclipses speedup
+
+
+def fig9_sparsity_sweep():
+    """Fig. 9: energy & speedup vs weight sparsity at two act densities."""
+    rows = []
+    base = None
+    for d in ["sa_zvcg", "sa_smt", "s2ta_w", "s2ta_aw"]:
+        for d_a in (0.5, 0.2, 0.125):
+            for w_sp in (0.0, 0.25, 0.5, 0.75, 0.875):
+                lay = typical_conv(1.0 - w_sp, d_a)
+                r = s2ta.run_layer(d, lay)
+                e = r.power_mw * r.time_s
+                if base is None:
+                    base = e  # zvcg @ dense weights, 50% act
+                rows.append(
+                    {
+                        "design": r.design,
+                        "w_sparsity": w_sp,
+                        "a_density": d_a,
+                        "speedup": round(r.speedup, 2),
+                        "energy_norm": round(e / base, 3),
+                    }
+                )
+    aw_peak = max(r["speedup"] for r in rows if "AW" in r["design"])
+    return rows, aw_peak  # paper: up to 8x
+
+
+def fig10_breakdown():
+    """Fig. 10: typical conv (50% w, 62.5% a sparsity) component energy."""
+    lay = typical_conv(0.5, 0.375)
+    rows = []
+    base_e = None
+    for d in ["sa", "sa_zvcg", "sa_smt", "s2ta_w", "s2ta_aw"]:
+        r = s2ta.run_layer(d, lay)
+        bd = s2ta.model_breakdown(d, lay)
+        e = r.power_mw * r.time_s
+        if d == "sa_zvcg":
+            base_e = e
+        rows.append(
+            {
+                "design": r.design,
+                "speedup": round(r.speedup, 2),
+                "energy_mj": round(e, 4),
+                **{k: round(v * r.time_s, 4) for k, v in bd.items()},
+            }
+        )
+    aw = [r for r in rows if r["design"] == "S2TA-AW"][0]
+    return rows, round(base_e / aw["energy_mj"], 2)
+
+
+def fig11_models():
+    """Fig. 11: per-model energy reduction + speedup vs SA-ZVCG."""
+    rows = []
+    ratios_e, ratios_s = [], []
+    for name, layers in MODELS.items():
+        base = s2ta.run_model("sa_zvcg", layers)
+        for d in ["sa", "sa_smt", "s2ta_w", "s2ta_aw"]:
+            r = s2ta.run_model(d, layers)
+            er = base["energy_mj"] / r["energy_mj"]
+            sr = base["time_s"] / r["time_s"]
+            rows.append(
+                {
+                    "model": name,
+                    "design": d,
+                    "energy_x_vs_zvcg": round(er, 2),
+                    "speedup_x_vs_zvcg": round(sr, 2),
+                    "tops_per_w": round(r["tops_per_w"], 2),
+                }
+            )
+            if d == "s2ta_aw":
+                ratios_e.append(er)
+                ratios_s.append(sr)
+    avg_e = sum(ratios_e) / len(ratios_e)
+    return rows, round(avg_e, 2)  # paper: 2.08x
+
+
+def fig12_perlayer():
+    """Fig. 12: AlexNet per-layer energy; published SparTen/Eyeriss-v2
+    points alongside (65nm comparison uses published inf/J)."""
+    rows = []
+    for d in ["sa_zvcg", "s2ta_w", "s2ta_aw"]:
+        for r in s2ta.run_model(d, MODELS["alexnet"])["layers"]:
+            rows.append(
+                {
+                    "design": r.design,
+                    "layer": r.layer,
+                    "energy_uj": round(r.power_mw * r.time_s * 1e3, 2),
+                }
+            )
+    for k, v in s2ta.ENERGY_65NM_ALEXNET_UJ.items():
+        rows.append({"design": k + " (paper, 65nm)", "layer": "total",
+                     "energy_uj": round(v, 1)})
+    aw = sum(r["energy_uj"] for r in rows if r["design"] == "S2TA-AW")
+    zv = sum(r["energy_uj"] for r in rows
+             if r["design"] == "SA-ZVCG" and r["layer"] != "total")
+    return rows, round(zv / aw, 2)
+
+
+def table1_buffers():
+    """Table 1: buffer bytes per MAC across architectures."""
+    rows = []
+    for k, v in s2ta.TABLE1_BUFFERS.items():
+        rows.append(
+            {
+                "architecture": k,
+                "operands_B": v["operands"],
+                "accumulators_B": v["accumulators"],
+                "total_B": v["operands"] + v["accumulators"],
+            }
+        )
+    sa = s2ta.TABLE1_BUFFERS["Systolic Array"]
+    w = s2ta.TABLE1_BUFFERS["S2TA-W"]
+    return rows, (sa["operands"] + sa["accumulators"]) / (
+        w["operands"] + w["accumulators"]
+    )  # ~6.9x less buffer than the dense SA
+
+
+def table2_breakdown():
+    """Table 2: S2TA-AW 16nm power breakdown — model vs published."""
+    bd = s2ta.model_breakdown("s2ta_aw", typical_conv(0.5, 0.5))
+    model = {
+        "MAC Datapath and Buffers": bd["mac"] + bd["op_buf"] + bd["acc_buf"],
+        "Weight SRAM (512KB)": bd["sram"] * 0.35,
+        "Activation SRAM (2MB)": bd["sram"] * 0.65,
+        "Cortex-M33 MCU x4": bd["mcu"],
+        "DAP Array": bd["dap"],
+    }
+    rows = []
+    for k, paper in s2ta.TABLE2_BREAKDOWN_MW.items():
+        rows.append(
+            {
+                "component": k,
+                "model_mw": round(model[k], 1),
+                "paper_mw": paper,
+                "ratio": round(model[k] / paper, 2),
+            }
+        )
+    total_model = sum(model.values())
+    return rows, round(total_model / 541.3, 3)
+
+
+def table4_models():
+    """Table 4: peak + per-model efficiency, 16nm and 65nm nodes."""
+    node65 = 14.3 / 1.1  # energy scale factor calibrated on S2TA-AW
+    rows = []
+    for d in ["sa_zvcg", "sa_smt", "s2ta_w", "s2ta_aw"]:
+        dp = s2ta.DESIGNS[d](0.5, 0.5)
+        rows.append(
+            {
+                "design": dp.name,
+                "node": "16nm",
+                "peak_tops": round(dp.tops, 1),
+                "tops_per_w": round(dp.tops_per_w, 2),
+            }
+        )
+        rows.append(
+            {
+                "design": dp.name,
+                "node": "65nm(scaled)",
+                "peak_tops": round(dp.tops / 2, 2),  # 0.5 GHz
+                "tops_per_w": round(dp.tops_per_w / node65, 2),
+            }
+        )
+    for name, layers in MODELS.items():
+        if name not in ("alexnet", "mobilenetv1"):
+            continue
+        for d in ["sa_zvcg", "sa_smt", "s2ta_w", "s2ta_aw"]:
+            r = s2ta.run_model(d, layers)
+            rows.append(
+                {
+                    "design": d,
+                    "node": f"16nm/{name}",
+                    "inf_per_s_k": round(r["inf_per_s"] / 1e3, 2),
+                    "inf_per_j_k": round(r["inf_per_j"] / 1e3, 2),
+                    "tops_per_w": round(r["tops_per_w"], 2),
+                }
+            )
+    aw = s2ta.DESIGNS["s2ta_aw"](0.5, 0.5)
+    return rows, round(aw.tops_per_w, 2)  # 14.3

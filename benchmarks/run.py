@@ -1,0 +1,62 @@
+"""Benchmark harness — one function per S2TA paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = headline metric of the
+table), followed by the full row dumps for inspection.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    rows, derived = fn(*a, **kw)
+    return rows, derived, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import perf_tables, table3_accuracy
+
+    jobs = [
+        ("fig1_energy_breakdown", perf_tables.fig1_energy_breakdown, {}),
+        ("fig3_smt_overhead", perf_tables.fig3_smt_overhead, {}),
+        ("fig9_sparsity_sweep", perf_tables.fig9_sparsity_sweep, {}),
+        ("fig10_breakdown", perf_tables.fig10_breakdown, {}),
+        ("fig11_models", perf_tables.fig11_models, {}),
+        ("fig12_perlayer", perf_tables.fig12_perlayer, {}),
+        ("table1_buffers", perf_tables.table1_buffers, {}),
+        ("table2_breakdown", perf_tables.table2_breakdown, {}),
+        ("table4_models", perf_tables.table4_models, {}),
+        (
+            "table3_accuracy",
+            table3_accuracy.run,
+            {"steps_base": 150 if fast else 400, "steps_ft": 80 if fast else 200},
+        ),
+    ]
+    # kernel microbenchmarks (wall time of the DBB ops on this host)
+    from benchmarks import kernel_bench
+
+    jobs.append(("kernel_dbb_matmul", kernel_bench.bench_dbb_matmul, {}))
+    jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {}))
+
+    print("name,us_per_call,derived")
+    details = []
+    for name, fn, kw in jobs:
+        rows, derived, us = _timed(fn, **kw)
+        print(f"{name},{us:.0f},{derived}")
+        details.append((name, rows))
+
+    print("\n=== details ===")
+    for name, rows in details:
+        print(f"\n--- {name} ---")
+        for r in rows:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Table 3 reproduction: DBB pruning accuracy — a REAL training experiment
+(not the analytical model).
+
+Trains a small CNN classifier on the deterministic synthetic vision task
+(offline container: no ImageNet/MNIST), then applies the paper's §8.1
+procedure:
+
+  baseline  -> INT8-style dense training
+  W-DBB     -> block-local magnitude pruning + fine-tune with masks
+  A-DBB     -> DAP (top-NNZ per 8-block, straight-through grad) fine-tune
+  A/W-DBB   -> both jointly
+  A-DBB (no fine-tune) -> shows the drop DAP causes before fine-tuning
+                          (paper: 71% -> 56.1% on MobileNetV1)
+
+Validates the paper's qualitative claims: fine-tuning recovers DBB
+accuracy to within ~1% of baseline, while un-fine-tuned DAP drops hard.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbb
+from repro.core.dap import dap
+from repro.core.schedule import prune_weights, wdbb_masks
+from repro.data.pipeline import SyntheticVision
+
+IMG = (10, 10, 8)
+N_CLASSES = 10
+
+
+def init_cnn(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "c1": jax.random.normal(k1, (3, 3, IMG[2], 16), jnp.float32) * 0.2,
+        "c2": jax.random.normal(k2, (3, 3, 16, 32), jnp.float32) * 0.15,
+        "d": jax.random.normal(k3, (2 * 2 * 32, N_CLASSES), jnp.float32) * 0.05,
+    }
+
+
+def forward(params, x, a_nnz: int | None):
+    """x [B, H, W, C]; DAP on channel (last) axis when a_nnz given."""
+    def maybe_dap(h):
+        if a_nnz is not None and h.shape[-1] % 8 == 0:
+            return dap(h, a_nnz, 8)
+        return h
+
+    h = maybe_dap(x)
+    h = jax.lax.conv_general_dilated(
+        h, params["c1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = maybe_dap(h)
+    h = jax.lax.conv_general_dilated(
+        h, params["c2"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["d"]
+
+
+def loss_fn(params, batch, a_nnz):
+    logits = forward(params, batch["x"], a_nnz)
+    onehot = jax.nn.one_hot(batch["y"], N_CLASSES)
+    ce = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return ce, acc
+
+
+@functools.partial(jax.jit, static_argnames=("a_nnz", "lr"))
+def train_step(params, batch, masks, a_nnz=None, lr=1e-2):
+    (ce, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, a_nnz)
+    params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+    if masks is not None:
+        params = jax.tree_util.tree_map(
+            lambda p, m: jnp.where(m, p, 0.0) if m.shape == p.shape else p,
+            params, masks,
+        )
+    return params, ce, acc
+
+
+def evaluate(params, data, a_nnz, n=20):
+    accs = []
+    for _ in range(n):
+        _, acc = loss_fn(params, next(data), a_nnz)
+        accs.append(float(acc))
+    return float(np.mean(accs))
+
+
+def run(steps_base=400, steps_ft=200, seed=0):
+    key = jax.random.PRNGKey(seed)
+    data = SyntheticVision(N_CLASSES, IMG, batch=128, seed=seed)
+    # held-out split: SAME class templates (same task), disjoint noise draws
+    test = SyntheticVision(N_CLASSES, IMG, batch=256, seed=seed)
+    test._step = 1_000_000
+
+    params = init_cnn(key)
+    for _ in range(steps_base):
+        params, ce, acc = train_step(params, next(data), None)
+    base_acc = evaluate(params, test, None)
+    rows = [{"config": "baseline (dense)", "acc": round(base_acc, 4)}]
+
+    cfg_w = dbb.DBBConfig(4, 8)
+    pred = lambda path, w: "c1" not in "/".join(
+        str(getattr(k, "key", k)) for k in path
+    )  # paper: first layer excluded
+
+    # ---- A-DBB without fine-tune: accuracy drops (paper §8.1)
+    drop_acc = evaluate(params, test, 2)
+    rows.append({"config": "A-DBB 2/8 no-finetune", "acc": round(drop_acc, 4)})
+
+    # ---- W-DBB 4/8 + fine-tune
+    p_w = prune_weights(params, cfg_w, predicate=pred)
+    masks = wdbb_masks(p_w, cfg_w, predicate=pred)
+    for _ in range(steps_ft):
+        p_w, ce, acc = train_step(p_w, next(data), masks)
+    rows.append({"config": "W-DBB 4/8 +ft", "acc": round(evaluate(p_w, test, None), 4)})
+
+    # ---- A-DBB 4/8 (DAP) + fine-tune
+    p_a = jax.tree_util.tree_map(lambda x: x, params)
+    for _ in range(steps_ft):
+        p_a, ce, acc = train_step(p_a, next(data), None, a_nnz=4)
+    rows.append({"config": "A-DBB 4/8 +ft", "acc": round(evaluate(p_a, test, 4), 4)})
+
+    # ---- joint A/W-DBB + fine-tune
+    p_aw = prune_weights(params, cfg_w, predicate=pred)
+    masks = wdbb_masks(p_aw, cfg_w, predicate=pred)
+    for _ in range(steps_ft):
+        p_aw, ce, acc = train_step(p_aw, next(data), masks, a_nnz=4)
+    rows.append(
+        {"config": "A/W-DBB 4/8 +ft", "acc": round(evaluate(p_aw, test, 4), 4)}
+    )
+    # verify the W-DBB bound actually holds post-training
+    wt = jnp.swapaxes(p_aw["d"], -2, -1)
+    assert bool(dbb.satisfies(wt, cfg_w)), "W-DBB bound violated after ft"
+    derived = rows[-1]["acc"] - base_acc  # ~>-0.02: joint DBB near baseline
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, derived = run()
+    for r in rows:
+        print(r)
+    print("joint A/W-DBB delta vs baseline:", round(derived, 4))

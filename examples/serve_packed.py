@@ -1,0 +1,51 @@
+"""Serving with DBB-packed weights: the paper's W-DBB compression applied
+to inference bandwidth.  Packs a DBB-compliant model into wire format
+(values + bitmask), serves a batch of prompts, and verifies the packed
+path is bit-identical to dense serving while streaming ~44% fewer weight
+bytes (fp32 4/8: 16B -> 9B per block... shown per dtype).
+
+    PYTHONPATH=src python examples/serve_packed.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import dbb
+from repro.core.schedule import prune_weights
+from repro.models import lm
+from repro.serve.engine import Engine, ServeConfig, pack_params_for_serving
+
+
+def main():
+    cfg = configs.get_config("granite_3_8b", smoke=True, sparsity_mode="wdbb")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+
+    # make weights DBB-compliant (as W-DBB training would)
+    pred = lambda path, w: not any(
+        s in "/".join(str(getattr(k, "key", k)) for k in path)
+        for s in ("embed", "norm", "ln"))
+    params = prune_weights(params, dbb.DBBConfig(4, 8), predicate=pred)
+
+    packed = pack_params_for_serving(params, cfg)
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(t))
+    layer_dense = nbytes(params["layers"])
+    layer_packed = nbytes(packed["layers"])
+    print(f"layer weights: dense {layer_dense/1e6:.2f} MB -> "
+          f"packed {layer_packed/1e6:.2f} MB "
+          f"({layer_dense/layer_packed:.2f}x compression)")
+
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (4, 12)).astype(np.int32)
+    out_d = Engine(params, cfg, ServeConfig(max_seq=64)).generate(prompts, 16)
+    out_p = Engine(params, cfg, ServeConfig(max_seq=64, pack_weights=True)).generate(prompts, 16)
+    assert (out_d == out_p).all(), "packed serving must match dense exactly"
+    print("packed == dense generation: OK")
+    print("sample:", out_p[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end training driver: a ~110M-parameter GQA transformer trained
+for a few hundred steps on the synthetic Markov LM stream, with the
+paper's full DBB workflow: dense warmup -> progressive W-DBB pruning ->
+joint A/W-DBB (DAP) training -> checkpoint -> resume.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+    PYTHONPATH=src python examples/train_e2e.py --tiny --steps 60   # CI
+
+The --tiny flag shrinks the model (~1M params) so the example completes
+in about a minute on one CPU core; the default config is ~110M params
+(granite-family: 12L x d768 x ff2048, vocab 8192).
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+from repro import configs
+from repro.core import dbb
+from repro.core.schedule import WDBBSchedule
+from repro.core.sparsity import SparsityConfig
+from repro.data.pipeline import MarkovLM, Prefetcher
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = configs.get_config("granite_3_8b", smoke=True)
+        cfg = dataclasses.replace(cfg, vocab=256, dtype="float32")
+        batch, seq = 8, 64
+    else:
+        cfg = dataclasses.replace(
+            configs.get_config("granite_3_8b", smoke=True),
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_ff=2048, vocab=8192, dtype="float32",
+            sparsity=SparsityConfig(mode="awdbb", w_nnz=4, a_nnz=4),
+        )
+        batch, seq = 8, 256
+    n_params = cfg.param_count()
+    print(f"model: {cfg.n_layers}L d{cfg.d_model} ~{n_params/1e6:.0f}M params, "
+          f"sparsity={cfg.sparsity.mode}")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_e2e_")
+    data = Prefetcher(MarkovLM(cfg.vocab, batch, seq, seed=0))
+    wdbb = WDBBSchedule(
+        target=dbb.DBBConfig(cfg.sparsity.w_nnz, cfg.sparsity.bz),
+        begin_step=args.steps // 10,
+        end_step=args.steps // 2,
+        update_every=10,
+    )
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                        total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, log_every=max(1, args.steps // 15),
+                      ckpt_every=args.steps // 2, ckpt_dir=ckpt_dir, wdbb=wdbb),
+        data,
+    )
+    hist = trainer.run(args.steps)
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # prove the W-DBB bound holds on the trained weights
+    w = trainer.params["layers"]["mlp"]["up"]["w"][0]
+    ok = bool(dbb.satisfies(w.T, dbb.DBBConfig(cfg.sparsity.w_nnz, cfg.sparsity.bz)))
+    print("W-DBB bound on trained weights:", ok)
+
+    # resume from checkpoint (simulated preemption recovery)
+    t2 = Trainer(
+        cfg,
+        OptimizerConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                        total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, log_every=0, ckpt_dir=ckpt_dir),
+        Prefetcher(MarkovLM(cfg.vocab, batch, seq, seed=0)),
+    )
+    print(f"restart recovered step {t2.step} from {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_config(name, smoke=False, sparsity_mode=...)``.
+
+One module per assigned architecture; each exposes ``CONFIG`` (the exact
+published configuration) and ``SMOKE`` (a reduced same-family variant used
+by CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeCell, shape_by_name  # noqa: F401
+from repro.core.sparsity import SparsityConfig
+
+ARCH_IDS = (
+    "granite_3_8b",
+    "qwen1_5_110b",
+    "minicpm3_4b",
+    "starcoder2_15b",
+    "hymba_1_5b",
+    "qwen2_vl_72b",
+    "granite_moe_1b_a400m",
+    "phi3_5_moe_42b_a6_6b",
+    "whisper_base",
+    "mamba2_130m",
+)
+
+# pure full-attention archs skip long_500k (see DESIGN.md §Arch-applicability)
+LONG_CONTEXT_OK = {"hymba_1_5b", "mamba2_130m", "starcoder2_15b"}
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(
+    name: str,
+    smoke: bool = False,
+    sparsity_mode: str | None = None,
+) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    cfg: ModelConfig = mod.SMOKE if smoke else mod.CONFIG
+    if sparsity_mode is not None:
+        cfg = dataclasses.replace(
+            cfg,
+            sparsity=dataclasses.replace(cfg.sparsity, mode=sparsity_mode),
+        )
+    return cfg
+
+
+def applicable_shapes(name: str) -> list:
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and canon(name) not in LONG_CONTEXT_OK:
+            continue
+        out.append(s)
+    return out

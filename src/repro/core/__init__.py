@@ -1,0 +1,35 @@
+"""repro.core — the paper's contribution: DBB structured sparsity.
+
+Public API:
+    DBBConfig, prune, pack, unpack, topk_block_mask, block_density, satisfies
+    DAPSpec, dap, apply_dap
+    WDBBSchedule, prune_weights, wdbb_masks, apply_masks
+    SparsityConfig, DENSE, WDBB_4_8, AWDBB_4_8
+"""
+
+from repro.core.dbb import (  # noqa: F401
+    DBBConfig,
+    DEFAULT_BZ,
+    PackedDBB,
+    block_density,
+    expand_bitmask,
+    pack,
+    pack_bitmask,
+    prune,
+    satisfies,
+    topk_block_mask,
+    unpack,
+)
+from repro.core.dap import DAPSpec, apply_dap, dap  # noqa: F401
+from repro.core.schedule import (  # noqa: F401
+    WDBBSchedule,
+    apply_masks,
+    prune_weights,
+    wdbb_masks,
+)
+from repro.core.sparsity import (  # noqa: F401
+    AWDBB_4_8,
+    DENSE,
+    SparsityConfig,
+    WDBB_4_8,
+)

@@ -1,0 +1,91 @@
+"""Dynamic Activation Pruning (DAP) — paper §5.1 / §8.1.
+
+DAP prunes activation tensors to DBB form *at runtime*: within each block of
+``BZ`` elements along the channel axis, keep the ``NNZ`` largest-magnitude
+elements (Top-NNZ), zero the rest.  In hardware this is the cascaded
+magnitude-maxpool array of Fig. 8; here it is :func:`repro.core.dbb.prune`.
+
+Training support (paper §8.1, "Training for A-DBB"): DAP is inserted in
+front of matmuls during fine-tuning, and its gradient is the binary keep
+mask — a straight-through estimator:
+
+    d DAP(a) / d a = 1 for Top-NNZ elements, 0 for pruned ones.
+
+The paper caps the DAP hardware at 5 maxpool stages (NNZ <= 5 for BZ = 8,
+§6.2); :class:`DAPSpec` carries that cap so per-layer variable density
+(1/8 .. 5/8, or dense bypass 8/8) matches the silicon.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbb
+
+HW_MAX_STAGES = 5  # paper §6.2: "We cap the maxpool stages at 5"
+
+
+@dataclasses.dataclass(frozen=True)
+class DAPSpec:
+    """Per-layer DAP configuration.
+
+    ``nnz == bz`` bypasses DAP entirely (dense mode).  ``nnz`` must be
+    <= :data:`HW_MAX_STAGES` unless dense, mirroring the DAP array.
+    """
+
+    nnz: int = 4
+    bz: int = dbb.DEFAULT_BZ
+
+    def __post_init__(self):
+        if self.nnz != self.bz and self.nnz > HW_MAX_STAGES:
+            raise ValueError(
+                f"DAP hardware supports NNZ<= {HW_MAX_STAGES} (or dense bypass "
+                f"NNZ==BZ); got {self.nnz}/{self.bz}"
+            )
+
+    @property
+    def cfg(self) -> dbb.DBBConfig:
+        return dbb.DBBConfig(nnz=self.nnz, bz=self.bz)
+
+    @property
+    def is_dense(self) -> bool:
+        return self.nnz == self.bz
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def dap(a: jax.Array, nnz: int, bz: int = dbb.DEFAULT_BZ) -> jax.Array:
+    """Top-NNZ-per-block activation pruning with straight-through gradient.
+
+    Forward: magnitude Top-NNZ per block of ``bz`` along the last axis.
+    Backward: gradient flows only through kept (Top-NNZ) elements.
+    """
+    if nnz == bz:
+        return a
+    return dbb.prune(a, dbb.DBBConfig(nnz=nnz, bz=bz))
+
+
+def _dap_fwd(a, nnz, bz):
+    if nnz == bz:
+        return a, None
+    mask = dbb.topk_block_mask(a, dbb.DBBConfig(nnz=nnz, bz=bz))
+    return jnp.where(mask, a, jnp.zeros_like(a)), mask
+
+
+def _dap_bwd(nnz, bz, mask, g):
+    if mask is None:
+        return (g,)
+    return (jnp.where(mask, g, jnp.zeros_like(g)),)
+
+
+dap.defvjp(_dap_fwd, _dap_bwd)
+
+
+def apply_dap(a: jax.Array, spec: DAPSpec | None) -> jax.Array:
+    """Convenience: identity when spec is None or dense."""
+    if spec is None or spec.is_dense:
+        return a
+    return dap(a, spec.nnz, spec.bz)

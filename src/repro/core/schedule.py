@@ -1,0 +1,123 @@
+"""W-DBB progressive pruning schedule — paper §8.1 "Training for W-DBB".
+
+"We apply magnitude based DBB-aware weight pruning, which is similar to
+random magnitude pruning [Zhu & Gupta], but pruning independently within
+each DBB block.  This typically runs for 20-50 epochs, progressively
+pruning small-magnitude weights within each DBB block, until the desired
+DBB sparsity constraint is met."
+
+We implement the Zhu-Gupta cubic ramp on the *per-block kept count*: at
+step ``t`` the current bound interpolates from ``BZ`` (dense) down to the
+target ``NNZ``:
+
+    nnz(t) = NNZ + (BZ - NNZ) * (1 - min(1, (t - t0)/(t1 - t0)))**3
+
+rounded up, so the bound tightens monotonically block-locally.  The weight
+mask is recomputed every ``update_every`` steps from current magnitudes —
+pruned weights may "regrow" until the mask freezes at ``t1`` (standard
+practice that the paper's 20-50-epoch progressive procedure implies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbb
+
+
+@dataclasses.dataclass(frozen=True)
+class WDBBSchedule:
+    target: dbb.DBBConfig = dbb.DBBConfig(4, 8)
+    begin_step: int = 0
+    end_step: int = 1000
+    update_every: int = 10
+
+    def nnz_at(self, step: jax.Array | int) -> jax.Array:
+        """Current (float) NNZ bound at ``step`` — cubic Zhu-Gupta ramp."""
+        t = jnp.clip(
+            (jnp.asarray(step, jnp.float32) - self.begin_step)
+            / max(1, self.end_step - self.begin_step),
+            0.0,
+            1.0,
+        )
+        span = self.target.bz - self.target.nnz
+        return self.target.nnz + span * (1.0 - t) ** 3
+
+    def cfg_at(self, step: int) -> dbb.DBBConfig:
+        """Static-python variant for host-side schedule decisions."""
+        import math
+
+        t = min(1.0, max(0.0, (step - self.begin_step) / max(1, self.end_step - self.begin_step)))
+        span = self.target.bz - self.target.nnz
+        nnz = int(math.ceil(self.target.nnz + span * (1.0 - t) ** 3))
+        return dbb.DBBConfig(nnz=min(nnz, self.target.bz), bz=self.target.bz)
+
+    def should_update(self, step: int) -> bool:
+        return step % self.update_every == 0 and step <= self.end_step
+
+
+def prune_weights(params, cfg: dbb.DBBConfig, predicate=None):
+    """Apply block-local magnitude pruning to every 2D+ weight in a pytree.
+
+    ``predicate(path, leaf) -> bool`` selects which leaves to prune;
+    default: every float array with ndim >= 2 whose *reduction* dim is
+    divisible by ``cfg.bz``.  DBB blocks along the reduction (input) dim;
+    weights are stored ``[..., in, out]`` (a leading layer-stack or expert
+    dim may precede), so the reduction dim is axis -2.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+
+    def maybe_prune(path, w):
+        ok = (
+            hasattr(w, "ndim")
+            and w.ndim >= 2
+            and jnp.issubdtype(w.dtype, jnp.floating)
+            and (w.shape[-2] % cfg.bz == 0)
+        )
+        if predicate is not None:
+            ok = ok and predicate(path, w)
+        if not ok:
+            return w
+        # block along the reduction (-2) axis: move it last, prune, move back
+        wt = jnp.swapaxes(w, -2, -1)
+        wt = dbb.prune(wt, cfg)
+        return jnp.swapaxes(wt, -2, -1)
+
+    new_leaves = [maybe_prune(p, w) for p, w in leaves]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def wdbb_masks(params, cfg: dbb.DBBConfig, predicate=None):
+    """Boolean mask pytree (True = keep) for W-DBB; same selection rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def mask_of(path, w):
+        ok = (
+            hasattr(w, "ndim")
+            and w.ndim >= 2
+            and jnp.issubdtype(w.dtype, jnp.floating)
+            and (w.shape[-2] % cfg.bz == 0)
+        )
+        if predicate is not None:
+            ok = ok and predicate(path, w)
+        if not ok:
+            return jnp.ones(getattr(w, "shape", ()), dtype=bool)
+        wt = jnp.swapaxes(w, -2, -1)
+        m = dbb.topk_block_mask(wt, cfg)
+        return jnp.swapaxes(m, -2, -1)
+
+    new_leaves = [mask_of(p, w) for p, w in flat]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def apply_masks(params, masks):
+    """Zero out masked-off weights (mask True = keep)."""
+    return jax.tree_util.tree_map(
+        lambda w, m: jnp.where(m, w, jnp.zeros_like(w)) if m.shape == getattr(w, "shape", ()) else w,
+        params,
+        masks,
+    )

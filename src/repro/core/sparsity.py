@@ -1,0 +1,58 @@
+"""Framework-level sparsity configuration — how DBB plugs into models.
+
+A :class:`SparsityConfig` travels inside every model config and controls:
+
+* ``w_dbb``  — static weight DBB bound (paper: 4/8 typical, tuned per model,
+  first layer excluded — Table 3 footnote 2).
+* ``a_dbb``  — activation DBB / DAP.  Per-layer variable (paper §5.2): the
+  ``a_nnz_per_layer`` list overrides the default for individual layers,
+  mirroring "per-layer tuned activation DBB ranges from 8/8 ... down to 2/8".
+* ``mode``   — ``dense`` | ``wdbb`` | ``awdbb`` — matching the paper's
+  SA / S2TA-W / S2TA-AW operating points.
+* ``serve_packed`` — serve-time weights stored in packed DBB layout
+  (values+indices) and expanded on the fly (the memory-roofline attack).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core import dbb
+from repro.core.dap import DAPSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    mode: str = "dense"  # dense | wdbb | awdbb
+    w_nnz: int = 4
+    a_nnz: int = 4
+    bz: int = dbb.DEFAULT_BZ
+    a_nnz_per_layer: Optional[Sequence[int]] = None  # variable A-DBB
+    exclude_first_layer: bool = True  # paper Table 3 note 2
+    serve_packed: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "wdbb", "awdbb"):
+            raise ValueError(f"unknown sparsity mode {self.mode!r}")
+
+    @property
+    def w_cfg(self) -> Optional[dbb.DBBConfig]:
+        if self.mode in ("wdbb", "awdbb"):
+            return dbb.DBBConfig(self.w_nnz, self.bz)
+        return None
+
+    def a_spec(self, layer_idx: int | None = None) -> Optional[DAPSpec]:
+        if self.mode != "awdbb":
+            return None
+        nnz = self.a_nnz
+        if self.a_nnz_per_layer is not None and layer_idx is not None:
+            nnz = self.a_nnz_per_layer[layer_idx % len(self.a_nnz_per_layer)]
+        if nnz >= self.bz:
+            return None  # dense bypass
+        return DAPSpec(nnz=nnz, bz=self.bz)
+
+
+DENSE = SparsityConfig(mode="dense")
+WDBB_4_8 = SparsityConfig(mode="wdbb", w_nnz=4)
+AWDBB_4_8 = SparsityConfig(mode="awdbb", w_nnz=4, a_nnz=4)

@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: W-DBB structured-sparse matmul (and joint A/W-DBB).
+
+TPU adaptation of the S2TA TPE (paper §6): the per-MAC operand mux of the
+DP4M8 datapath (Fig. 6c) becomes an **in-VMEM rank-decode expansion** of the
+compressed weight block, followed by a dense MXU matmul on the expanded
+tile.  The win on TPU is *HBM bandwidth*: weights stream from HBM in packed
+DBB form (``NNZ/BZ`` of the dense bytes + 1-byte bitmask per block-column)
+and are expanded once per (K-tile × N-tile), amortized across the whole
+M-tile — the software analogue of intra-TPE operand reuse.
+
+Wire format (see ``repro.core.dbb.pack_bitmask``):
+    w_vals [K//BZ, NNZ, N]  — j-th set bit's value, ascending positions
+    w_mask [K//BZ, N] uint8 — bit b set ⇔ block position b is a non-zero
+
+Grid ``(M//TM, N//TN, K//TK)`` with K innermost (arbitrary semantics);
+float32 accumulator scratch in VMEM.  Tile defaults are MXU-aligned
+(TM, TN multiples of 128 where shapes allow; TK a multiple of BZ).
+
+The kernels are validated in ``interpret=True`` mode against the pure-jnp
+oracles in ``ref.py`` (this container is CPU-only; TPU is the target).
+Mosaic layout note: the expansion assembles the dense tile by stacking BZ
+row-slabs and collapsing ``[KB, BZ, TN] -> [KB*BZ, TN]`` — a second-minor
+reshape with the 128-lane dim unchanged, which Mosaic supports for
+(8,128)-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import dbb
+
+
+def _expand_w_tile(wv, wm, cfg: dbb.DBBConfig):
+    """Expand packed weights [TKB, NNZ, TN] + mask [TKB, TN] -> [TKB*BZ, TN].
+
+    Rank decode: position b holds values[rank(b)] iff bit b is set, where
+    rank(b) = popcount(mask & (2^b - 1)).  The rank is accumulated across
+    the static python loop over b (BZ is a compile-time constant).
+    """
+    mask = wm.astype(jnp.int32)
+    rank = jnp.zeros_like(mask)
+    rows = []
+    zero = jnp.zeros(mask.shape, wv.dtype)
+    for b in range(cfg.bz):
+        bit = (mask >> b) & 1
+        val = zero
+        for j in range(cfg.nnz):
+            val = jnp.where(rank == j, wv[:, j, :], val)
+        rows.append(jnp.where(bit == 1, val, zero))
+        rank = rank + bit
+    dense = jnp.stack(rows, axis=1)  # [TKB, BZ, TN]
+    return dense.reshape(dense.shape[0] * cfg.bz, dense.shape[2])
+
+
+def _expand_a_tile(xv, xm, cfg: dbb.DBBConfig):
+    """Expand packed activations [TM, TKB, NNZ] + mask [TM, TKB] -> [TM, TKB*BZ]."""
+    mask = xm.astype(jnp.int32)
+    rank = jnp.zeros_like(mask)
+    cols = []
+    zero = jnp.zeros(mask.shape, xv.dtype)
+    for b in range(cfg.bz):
+        bit = (mask >> b) & 1
+        val = zero
+        for j in range(cfg.nnz):
+            val = jnp.where(rank == j, xv[:, :, j], val)
+        cols.append(jnp.where(bit == 1, val, zero))
+        rank = rank + bit
+    dense = jnp.stack(cols, axis=2)  # [TM, TKB, BZ]
+    return dense.reshape(dense.shape[0], dense.shape[1] * cfg.bz)
+
+
+def _dbb_matmul_kernel(x_ref, wv_ref, wm_ref, o_ref, acc_ref, *, cfg, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_dense = _expand_w_tile(wv_ref[...], wm_ref[...], cfg)  # [TK, TN]
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_dense.astype(x_ref.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dbb_matmul_aw_kernel(
+    xv_ref, xm_ref, wv_ref, wm_ref, o_ref, acc_ref, *, cfg_a, cfg_w, nk
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_dense = _expand_a_tile(xv_ref[...], xm_ref[...], cfg_a)  # [TM, TK]
+    w_dense = _expand_w_tile(wv_ref[...], wm_ref[...], cfg_w)  # [TK, TN]
+    acc_ref[...] += jnp.dot(
+        x_dense, w_dense.astype(x_dense.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick(t, n, lo):
+    """Largest divisor of n that is <= t, but at least lo if possible."""
+    c = min(t, n)
+    while c > 1 and n % c != 0:
+        c -= 1
+    return max(c, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "tm", "tk", "tn", "out_dtype", "interpret"),
+)
+def dbb_matmul_pallas(
+    x: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    *,
+    cfg: dbb.DBBConfig,
+    tm: int = 128,
+    tk: int = 512,
+    tn: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x [M,K] @ expand(w) [K,N] -> [M,N]`` with W-DBB packed weights."""
+    m, k = x.shape
+    kb, nnz, n = w_vals.shape
+    assert kb * cfg.bz == k and nnz == cfg.nnz, (x.shape, w_vals.shape, cfg)
+    out_dtype = out_dtype or x.dtype
+    tm = _pick(tm, m, 8)
+    tn = _pick(tn, n, 128)
+    tk = _pick(tk, k, cfg.bz)
+    if tk % cfg.bz:  # tk must hold whole blocks
+        tk = cfg.bz * max(1, tk // cfg.bz)
+        while k % tk:
+            tk -= cfg.bz
+    tkb = tk // cfg.bz
+    nk = k // tk
+    grid = (m // tm, n // tn, nk)
+    return pl.pallas_call(
+        functools.partial(_dbb_matmul_kernel, cfg=cfg, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tkb, nnz, tn), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_vals, w_mask)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_a", "cfg_w", "tm", "tk", "tn", "out_dtype", "interpret"),
+)
+def dbb_matmul_aw_pallas(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    *,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    tm: int = 128,
+    tk: int = 512,
+    tn: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Joint A/W-DBB matmul: both operands stream packed (S2TA-AW analogue)."""
+    m, kb_a, nnz_a = x_vals.shape
+    kb, nnz_w, n = w_vals.shape
+    assert kb_a == kb and nnz_a == cfg_a.nnz and nnz_w == cfg_w.nnz
+    k = kb * cfg_w.bz
+    out_dtype = out_dtype or x_vals.dtype
+    tm = _pick(tm, m, 8)
+    tn = _pick(tn, n, 128)
+    tk = _pick(tk, k, cfg_w.bz)
+    if tk % cfg_w.bz:
+        tk = cfg_w.bz * max(1, tk // cfg_w.bz)
+        while k % tk:
+            tk -= cfg_w.bz
+    tkb = tk // cfg_w.bz
+    nk = k // tk
+    grid = (m // tm, n // tn, nk)
+    return pl.pallas_call(
+        functools.partial(
+            _dbb_matmul_aw_kernel, cfg_a=cfg_a, cfg_w=cfg_w, nk=nk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tkb, nnz_a), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((tm, tkb), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tkb, nnz_w, tn), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_vals, x_mask, w_vals, w_mask)

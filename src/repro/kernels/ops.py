@@ -1,0 +1,105 @@
+"""Jit'd public wrappers around the DBB kernels.
+
+Every op takes ``impl``:
+  * ``"jnp"``    — pure-jnp path (the oracle maths, shardable under pjit;
+    used by the multi-pod dry-run and on CPU).  It *keeps the packed wire
+    format*, so compiled HBM bytes reflect the compression — this is how
+    the technique shows up in the roofline's memory term.
+  * ``"pallas"`` — the TPU kernel (validated via interpret=True on CPU).
+  * ``"interpret"`` — the TPU kernel body executed in Python (testing).
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbb
+from repro.kernels import ref
+from repro.kernels.dbb_matmul import dbb_matmul_aw_pallas, dbb_matmul_pallas
+from repro.kernels.dap_prune import dap_prune_pallas
+
+Impl = Literal["jnp", "pallas", "interpret"]
+
+
+def dbb_matmul(
+    x: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    cfg: dbb.DBBConfig,
+    *,
+    impl: Impl = "jnp",
+    out_dtype=None,
+    **tile_kw,
+) -> jax.Array:
+    """W-DBB matmul ``[M,K] x packed[K,N] -> [M,N]``."""
+    if impl == "jnp":
+        return ref.dbb_matmul_ref(x, w_vals, w_mask, cfg, out_dtype=out_dtype)
+    return dbb_matmul_pallas(
+        x,
+        w_vals,
+        w_mask,
+        cfg=cfg,
+        out_dtype=out_dtype,
+        interpret=(impl == "interpret"),
+        **tile_kw,
+    )
+
+
+def dbb_matmul_aw(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    *,
+    impl: Impl = "jnp",
+    out_dtype=None,
+    **tile_kw,
+) -> jax.Array:
+    """Joint A/W-DBB matmul with both operands packed."""
+    if impl == "jnp":
+        return ref.dbb_matmul_aw_ref(
+            x_vals, x_mask, w_vals, w_mask, cfg_a, cfg_w, out_dtype=out_dtype
+        )
+    return dbb_matmul_aw_pallas(
+        x_vals,
+        x_mask,
+        w_vals,
+        w_mask,
+        cfg_a=cfg_a,
+        cfg_w=cfg_w,
+        out_dtype=out_dtype,
+        interpret=(impl == "interpret"),
+        **tile_kw,
+    )
+
+
+def dap_prune(
+    x: jax.Array,
+    nnz: int,
+    bz: int = dbb.DEFAULT_BZ,
+    *,
+    impl: Impl = "jnp",
+    **tile_kw,
+):
+    """DAP: (pruned, bitmask).  Accepts any [..., K]; kernels see 2D."""
+    if impl == "jnp":
+        return ref.dap_prune_ref(x, nnz, bz)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    pruned, mask = dap_prune_pallas(
+        x2, nnz=nnz, bz=bz, interpret=(impl == "interpret"), **tile_kw
+    )
+    return (
+        pruned.reshape(shape),
+        mask.reshape(*shape[:-1], shape[-1] // bz),
+    )
+
+
+# Re-export the packers so users need only `repro.kernels.ops`.
+pack_weight = ref.pack_weight_for_kernel
+pack_act = ref.pack_act_for_kernel

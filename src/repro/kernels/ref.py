@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, sweeping shapes/dtypes — see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbb
+
+
+def dbb_matmul_ref(
+    x: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    cfg: dbb.DBBConfig,
+    out_dtype=None,
+) -> jax.Array:
+    """W-DBB matmul oracle.
+
+    ``x [M, K]`` dense; weights in kernel wire format (see
+    :func:`repro.core.dbb.pack_bitmask`) blocked along the reduction dim:
+    ``w_vals [K//BZ, NNZ, N]``, ``w_mask [K//BZ, N] uint8``.
+    Returns ``x @ expand(w) [M, N]``.
+    """
+    # expand_bitmask expects the block axis structure on the last dim; here
+    # values are [KB, NNZ, N] with the block contents per output column, so
+    # move N forward: [N, KB, NNZ] + mask [N, KB] -> dense [N, K] -> [K, N].
+    vals = jnp.moveaxis(w_vals, -1, 0)  # [N, KB, NNZ]
+    mask = jnp.moveaxis(w_mask, -1, 0)  # [N, KB]
+    w_dense = dbb.expand_bitmask(vals, mask, cfg)  # [N, K]
+    w_dense = w_dense.T  # [K, N]
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x, w_dense.astype(x.dtype), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def dbb_matmul_aw_ref(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    out_dtype=None,
+) -> jax.Array:
+    """Joint A/W-DBB matmul oracle (S2TA-AW analogue).
+
+    Activations in wire format ``x_vals [M, K//BZ, NNZ_a]``,
+    ``x_mask [M, K//BZ] uint8``; weights as in :func:`dbb_matmul_ref`.
+    """
+    x_dense = dbb.expand_bitmask(x_vals, x_mask, cfg_a)  # [M, K]
+    return dbb_matmul_ref(x_dense, w_vals, w_mask, cfg_w, out_dtype=out_dtype)
+
+
+def dap_prune_ref(x: jax.Array, nnz: int, bz: int = dbb.DEFAULT_BZ):
+    """DAP oracle: (pruned dense tensor, per-block uint8 bitmask)."""
+    cfg = dbb.DBBConfig(nnz, bz)
+    pruned = dbb.prune(x, cfg)
+    kept = pruned != 0
+    kept_b = kept.reshape(*kept.shape[:-1], kept.shape[-1] // bz, bz)
+    weights = (2 ** jnp.arange(bz, dtype=jnp.uint32)).astype(jnp.uint32)
+    bitmask = jnp.sum(kept_b.astype(jnp.uint32) * weights, axis=-1).astype(jnp.uint8)
+    return pruned, bitmask
+
+
+def pack_weight_for_kernel(w: jax.Array, cfg: dbb.DBBConfig):
+    """Dense ``w [K, N]`` -> kernel wire format (prunes if needed).
+
+    Returns ``(w_vals [K//BZ, NNZ, N], w_mask [K//BZ, N] uint8)``.
+    """
+    vals, mask = dbb.pack_bitmask(w.T, cfg)  # [N, KB, NNZ], [N, KB]
+    return jnp.moveaxis(vals, 0, -1), jnp.moveaxis(mask, 0, -1)
+
+
+def pack_act_for_kernel(x: jax.Array, cfg: dbb.DBBConfig):
+    """Dense ``x [M, K]`` -> ``(x_vals [M, K//BZ, NNZ], x_mask [M, K//BZ])``."""
+    return dbb.pack_bitmask(x, cfg)

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (zero allocation), print memory/cost analysis, and
+emit roofline terms (see launch/roofline.py).
+
+MUST be executed as its own process (the XLA flag above locks the device
+count at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import shape_by_name  # noqa: E402
+from repro.launch import roofline, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import encdec, lm  # noqa: E402
+from repro.sharding import partition  # noqa: E402
+from repro.train import optimizer, train_step as ts  # noqa: E402
+
+
+def _shardings(mesh, spec_tree, abs_tree):
+    return partition.tree_shardings(mesh, spec_tree, abs_tree)
+
+
+def _with_layers(cfg, n: int, scan: bool):
+    kw = {"n_layers": n, "scan_layers": scan}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower(cfg, cell, mesh, multi_pod, packed=False):
+    """Build and lower the cell's step function.  Returns `lowered`."""
+    t0 = time.time()
+
+    if cell.kind == "train":
+        params_abs, p_specs, opt_abs, o_specs = specs.abstract_model_state(
+            cfg, with_opt=True
+        )
+        batch_abs, b_specs = specs.train_batch_specs(cfg, cell, multi_pod)
+        opt_cfg = optimizer.OptimizerConfig()
+
+        def step(params, opt_state, batch):
+            return ts.train_step(params, opt_state, batch, cfg=cfg, opt_cfg=opt_cfg)
+
+        in_sh = (
+            _shardings(mesh, p_specs, params_abs),
+            optimizer.OptState(
+                step=NamedSharding(mesh, P()),
+                mu=_shardings(mesh, o_specs.mu, opt_abs.mu),
+                nu=_shardings(mesh, o_specs.nu, opt_abs.nu),
+            ),
+            _shardings(mesh, b_specs, batch_abs),
+        )
+        out_sh = (in_sh[0], in_sh[1], None)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, batch_abs)
+    elif cell.kind == "prefill":
+        params_abs, p_specs = specs.abstract_model_state(cfg, with_opt=False)
+        args_abs, a_specs = specs.prefill_specs(cfg, cell, multi_pod)
+
+        if cfg.family == "encdec":
+            def step(params, args):
+                return encdec.forward(params, args["frames"], args["tokens"], cfg)[0]
+        elif cfg.family == "vlm":
+            def step(params, args):
+                return lm.forward(
+                    params, args["tokens"], cfg,
+                    patch_embeds=args["patch_embeds"], pos3=args["pos3"],
+                )[0]
+        else:
+            def step(params, args):
+                return lm.forward(params, args["tokens"], cfg)[0]
+
+        in_sh = (
+            _shardings(mesh, p_specs, params_abs),
+            _shardings(mesh, a_specs, args_abs),
+        )
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(params_abs, args_abs)
+    else:  # decode
+        params_abs, p_specs = specs.abstract_model_state(cfg, with_opt=False)
+        if getattr(cfg, "serve_tp2d", True):
+            # §Perf-A1: weight-stationary mega-TP for decode
+            p_specs = specs.serving_specs(p_specs)
+        if packed:
+            # §Perf-A3: DBB wire-format (compressed) serving weights
+            params_abs, p_specs = specs.packed_state(cfg, params_abs, p_specs)
+        args_abs, a_specs = specs.decode_specs(cfg, cell, multi_pod)
+
+        if cfg.family == "encdec":
+            def step(params, args):
+                return encdec.decode_step(
+                    params, args["cache"], args["enc_out"],
+                    args["tokens"], args["pos"], cfg,
+                )
+        else:
+            def step(params, args):
+                return lm.decode_step(
+                    params, args["cache"], args["tokens"], args["pos"], cfg
+                )
+
+        in_sh = (
+            _shardings(mesh, p_specs, params_abs),
+            _shardings(mesh, a_specs, args_abs),
+        )
+        cache_sh = in_sh[1]["cache"]
+        out_sh = (None, cache_sh)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(1,),
+            ).lower(params_abs, args_abs)
+    return lowered, time.time() - t0
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               sparsity_mode: str | None = None, extra_tags: str = "",
+               cfg_override=None):
+    """Lower+compile one cell; returns result dict.
+
+    Three compiles: (1) the production scanned-layers program — proves the
+    sharding/config and yields memory_analysis; (2)+(3) 1-layer and
+    2-layer *unrolled* variants, whose cost difference isolates the
+    per-layer body cost (XLA cost_analysis counts a while body once), so
+      total = (c1 - body) + n_layers * body,   body = c2 - c1.
+    """
+    cfg = cfg_override or configs.get_config(arch, sparsity_mode=sparsity_mode)
+    cell = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.moe is not None:
+        # shard-local MoE dispatch: one routing group per data shard
+        n_batch_shards = 32 if multi_pod else 16
+        cfg = dataclasses.replace(
+            cfg, moe_groups=min(n_batch_shards, cell.global_batch)
+        )
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    from repro.sharding.context import use_mesh
+
+    packed = extra_tags == "packed"
+    with use_mesh(mesh, batch_axes=batch_axes):
+        lowered, t_lower = _lower(cfg, cell, mesh, multi_pod, packed=packed)
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        rl_scanned = roofline.analyze(compiled)
+
+        # per-layer cost extraction via unrolled 1/2-layer variants
+        def cost_of(k):
+            low, _ = _lower(
+                _with_layers(cfg, k, scan=False), cell, mesh, multi_pod,
+                packed=packed,
+            )
+            return roofline.analyze(low.compile())
+
+        c1, c2 = cost_of(1), cost_of(2)
+    L = cfg.n_layers
+
+    def corrected(m1, m2):
+        body = max(0.0, m2 - m1)
+        pre = max(0.0, m1 - body)
+        return pre + L * body
+
+    coll_break = {
+        k: corrected(c1.coll_breakdown[k], c2.coll_breakdown[k])
+        for k in c1.coll_breakdown
+    }
+    rl = roofline.Roofline(
+        flops=corrected(c1.flops, c2.flops),
+        bytes_hbm=corrected(c1.bytes_hbm, c2.bytes_hbm),
+        bytes_collective=corrected(c1.bytes_collective, c2.bytes_collective),
+        coll_breakdown=coll_break,
+        coll_counts=c2.coll_counts,
+    )
+
+    mflops = roofline.model_flops(cfg, cell)
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "sparsity": cfg.sparsity.mode,
+        "tags": extra_tags,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": rl.as_dict(),
+        "roofline_scanned_raw": rl_scanned.as_dict(),
+        "model_flops_global": mflops,
+        "model_flops_per_device": mflops / n_dev,
+        "useful_flops_ratio": (mflops / n_dev) / rl.flops if rl.flops else None,
+    }
+    return result
+
+
+def cell_id(arch, shape, mesh_name, sparsity=None, tags=""):
+    sfx = f"_{sparsity}" if sparsity else ""
+    tag = f"_{tags}" if tags else ""
+    return f"{arch}_{shape}_{mesh_name}{sfx}{tag}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--sparsity", type=str, default=None,
+                    help="dense|wdbb|awdbb (default: config's own)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="DBB wire-format serving weights (decode cells)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = configs.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        shapes = (
+            [shape_by_name(args.shape)] if args.shape
+            else configs.applicable_shapes(arch)
+        )
+        for cell in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                tags = "packed" if args.packed else ""
+                cid = cell_id(arch, cell.name, mesh_name, args.sparsity, tags)
+                path = os.path.join(args.out, cid + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {cid}")
+                    continue
+                print(f"[dryrun] {cid} ...", flush=True)
+                try:
+                    res = lower_cell(arch, cell.name, mp, args.sparsity,
+                                     extra_tags=tags)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    rl = res["roofline"]
+                    print(
+                        f"  ok compile={res['compile_s']}s "
+                        f"flops/dev={rl['flops_per_device']:.3e} "
+                        f"bytes/dev={rl['bytes_per_device']:.3e} "
+                        f"coll/dev={rl['collective_bytes_per_device']:.3e} "
+                        f"bottleneck={rl['bottleneck']} "
+                        f"useful={res['useful_flops_ratio'] and round(res['useful_flops_ratio'],3)}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((cid, repr(e)))
+                    print(f"  FAIL {cid}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for cid, err in failures:
+            print(" ", cid, err)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

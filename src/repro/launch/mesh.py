@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model) — the ``pod`` axis is
+pure data parallelism by default (optionally pipeline, see
+models/pipeline.py), so cross-pod traffic is only the gradient reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist (1 on CPU tests): (data=1, model=n)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,159 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e-class chip —
+    peak 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (per step, in seconds):
+    compute    = HLO_FLOPs / (chips x peak)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+``cost_analysis`` on a GSPMD-partitioned executable reports the
+*per-device* program, so per-chip terms use its numbers directly; the
+"/(chips x ...)" in the formulas above is then already applied.  The
+collective bytes are not in cost_analysis: we parse the optimized HLO and
+sum operand/result sizes of every collective op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-collective-kind byte totals from optimized HLO (per device).
+
+    For each collective instruction we count the *result* shape bytes
+    (the tuple of operands for variadic collectives appears in the result
+    type too, so result-side counting avoids double counting).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match: %name = <shape(s)> <op>(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[kind] += _shape_bytes(result_type)
+        count[kind] += 1
+    return out, count
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_hbm: float  # per device
+    bytes_collective: float  # per device
+    coll_breakdown: dict
+    coll_counts: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self):
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_hbm,
+            "collective_bytes_per_device": self.bytes_collective,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_breakdown": self.coll_breakdown,
+            "coll_counts": self.coll_counts,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll, counts = collective_bytes(hlo)
+    return Roofline(
+        flops=flops,
+        bytes_hbm=byts,
+        bytes_collective=float(sum(coll.values())),
+        coll_breakdown=coll,
+        coll_counts=counts,
+    )
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS convention: 6·N·D train, 2·N·D prefill, 2·N·B decode
+    (N = active params for MoE)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence

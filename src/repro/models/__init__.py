@@ -1,0 +1,2 @@
+"""Model zoo: decoder-only LMs (dense/GQA, MLA, VLM, MoE, SSM, hybrid) and
+the Whisper-style enc-dec, all DBB-sparsity-aware."""

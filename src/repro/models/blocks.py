@@ -1,0 +1,168 @@
+"""Per-layer blocks: dense/MoE decoder block, Hymba hybrid block, Whisper
+encoder/decoder blocks.  Every block is a pure function over (params, x)
+returning (x', new_cache_layer, aux) and has a matching ``make_*`` that
+returns (params, specs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    layernorm,
+    make_mlp,
+    make_norm,
+    mlp_forward,
+    rmsnorm,
+)
+
+
+def make_decoder_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["ln1"], specs["ln1"] = make_norm(cfg.d_model)
+    params["ln2"], specs["ln2"] = make_norm(cfg.d_model)
+    if cfg.mla is not None:
+        params["attn"], specs["attn"] = attn.make_mla(ks[0], cfg, dtype)
+    else:
+        params["attn"], specs["attn"] = attn.make_gqa(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        params["ssm"], specs["ssm"] = ssm_mod.make_mamba2(ks[2], cfg, dtype)
+        params["ln_attn_out"], specs["ln_attn_out"] = make_norm(cfg.d_model)
+        params["ln_ssm_out"], specs["ln_ssm_out"] = make_norm(cfg.d_model)
+    if cfg.moe is not None:
+        params["moe"], specs["moe"] = moe_mod.make_moe(ks[1], cfg, dtype)
+    else:
+        params["mlp"], specs["mlp"] = make_mlp(
+            ks[1], cfg.d_model, cfg.d_ff, act=cfg.mlp_act, dtype=dtype
+        )
+    return params, specs
+
+
+def decoder_block(
+    p,
+    x,
+    cfg,
+    positions,
+    *,
+    layer_idx=None,
+    cache_layer=None,
+    decode_pos=None,
+    rope_cs=None,
+):
+    """Pre-norm decoder block.  Works for dense/GQA, MLA, MoE, hybrid.
+
+    cache_layer: attention ring-buffer dict, and for hybrid additionally
+    {"ssm_state", "ssm_conv"} merged in the same dict.
+    """
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = None
+    if cache_layer is not None:
+        attn_cache = {k: cache_layer[k] for k in ("k", "v", "pos")}
+    if cfg.mla is not None:
+        a_out, new_attn_cache = attn.mla_forward(
+            p["attn"], h, cfg, positions,
+            layer_idx=layer_idx, cache_layer=attn_cache, decode_pos=decode_pos,
+        )
+    else:
+        a_out, new_attn_cache = attn.gqa_forward(
+            p["attn"], h, cfg, positions,
+            layer_idx=layer_idx, cache_layer=attn_cache,
+            decode_pos=decode_pos, rope_cs=rope_cs,
+        )
+
+    new_cache = None
+    if cfg.family == "hybrid":
+        ssm_cache = None
+        if cache_layer is not None:
+            ssm_cache = {"state": cache_layer["ssm_state"], "conv": cache_layer["ssm_conv"]}
+        s_out, new_ssm_cache = ssm_mod.mamba2_forward(
+            p["ssm"], h, cfg, layer_idx=layer_idx, cache_layer=ssm_cache
+        )
+        # Hymba: mean of the two normalized branch outputs
+        mixed = 0.5 * (
+            rmsnorm(a_out, p["ln_attn_out"], cfg.norm_eps)
+            + rmsnorm(s_out, p["ln_ssm_out"], cfg.norm_eps)
+        )
+        x = x + mixed
+        if cache_layer is not None:
+            new_cache = dict(new_attn_cache)
+            new_cache["ssm_state"] = new_ssm_cache["state"]
+            new_cache["ssm_conv"] = new_ssm_cache["conv"]
+    else:
+        x = x + a_out
+        new_cache = new_attn_cache
+
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        m_out, aux = moe_mod.moe_forward(
+            p["moe"], h2, cfg, layer_idx=layer_idx, n_groups=cfg.moe_groups
+        )
+    else:
+        m_out = mlp_forward(
+            p["mlp"], h2, act=cfg.mlp_act, sparsity=cfg.sparsity, layer_idx=layer_idx
+        )
+    return x + m_out, new_cache, aux
+
+
+# ----------------------------------------------------------------- whisper
+
+
+def make_encoder_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    params, specs = {}, {}
+    params["ln1"], specs["ln1"] = make_norm(cfg.d_model, bias=True)
+    params["ln2"], specs["ln2"] = make_norm(cfg.d_model, bias=True)
+    params["attn"], specs["attn"] = attn.make_gqa(ks[0], cfg, dtype)
+    params["mlp"], specs["mlp"] = make_mlp(
+        ks[1], cfg.d_model, cfg.d_ff, act="gelu", dtype=dtype
+    )
+    return params, specs
+
+
+def encoder_block(p, x, cfg, positions, *, layer_idx=None):
+    h = layernorm(x, p["ln1"], cfg.norm_eps)
+    a_out, _ = attn.gqa_forward(
+        p["attn"], h, cfg, positions, layer_idx=layer_idx, causal=False
+    )
+    x = x + a_out
+    h2 = layernorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_forward(
+        p["mlp"], h2, act="gelu", sparsity=cfg.sparsity, layer_idx=layer_idx
+    )
+
+
+def make_xdecoder_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["ln1"], specs["ln1"] = make_norm(cfg.d_model, bias=True)
+    params["ln_x"], specs["ln_x"] = make_norm(cfg.d_model, bias=True)
+    params["ln2"], specs["ln2"] = make_norm(cfg.d_model, bias=True)
+    params["attn"], specs["attn"] = attn.make_gqa(ks[0], cfg, dtype)
+    params["xattn"], specs["xattn"] = attn.make_cross_attn(ks[1], cfg, dtype)
+    params["mlp"], specs["mlp"] = make_mlp(
+        ks[2], cfg.d_model, cfg.d_ff, act="gelu", dtype=dtype
+    )
+    return params, specs
+
+
+def xdecoder_block(
+    p, x, enc_out, cfg, positions, *, layer_idx=None, cache_layer=None, decode_pos=None
+):
+    h = layernorm(x, p["ln1"], cfg.norm_eps)
+    a_out, new_cache = attn.gqa_forward(
+        p["attn"], h, cfg, positions,
+        layer_idx=layer_idx, cache_layer=cache_layer, decode_pos=decode_pos,
+    )
+    x = x + a_out
+    hx = layernorm(x, p["ln_x"], cfg.norm_eps)
+    x = x + attn.cross_attn_forward(p["xattn"], hx, enc_out, cfg, layer_idx=layer_idx)
+    h2 = layernorm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_forward(
+        p["mlp"], h2, act="gelu", sparsity=cfg.sparsity, layer_idx=layer_idx
+    )
+    return x, new_cache

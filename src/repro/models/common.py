@@ -1,0 +1,186 @@
+"""Shared model building blocks: params+sharding-spec construction, norms,
+activations, and the DBB-aware linear layer (where the paper's technique
+plugs into every architecture).
+
+Param construction convention
+-----------------------------
+Every ``make_*`` helper returns ``(params, specs)`` — two parallel pytrees,
+the second holding ``jax.sharding.PartitionSpec`` leaves.  Specs express
+*intent* (e.g. FSDP over ``data``, tensor-parallel over ``model``); the
+launcher sanitizes them against the actual mesh (dropping axes that do not
+divide the dim evenly) so a single definition serves every mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dbb
+from repro.core.dap import apply_dap
+from repro.core.sparsity import SparsityConfig
+from repro.kernels import ops
+
+# Logical mesh axis names (see launch/mesh.py).
+POD, DATA, MODEL = "pod", "data", "model"
+BATCH_AXES = (POD, DATA)  # batch shards over both
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# --------------------------------------------------------------------- init
+
+
+def make_linear(
+    key,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.bfloat16,
+    spec: P = P(DATA, MODEL),
+    scale: Optional[float] = None,
+):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    params = {"w": w}
+    specs = {"w": spec}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        out_axis = spec[-1] if len(spec) >= 2 else None
+        specs["b"] = P(out_axis)
+    return params, specs
+
+
+def make_embedding(key, vocab: int, d: int, *, dtype=jnp.bfloat16):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    # vocab dims are frequently non-divisible (49155, 50280…): shard d_model.
+    return {"w": w}, {"w": P(None, MODEL)}
+
+
+def make_norm(d: int, *, dtype=jnp.float32, bias: bool = False):
+    params = {"scale": jnp.ones((d,), dtype)}
+    specs = {"scale": P(None)}
+    if bias:
+        params["bias"] = jnp.zeros((d,), dtype)
+        specs["bias"] = P(None)
+    return params, specs
+
+
+# ------------------------------------------------------------------ forward
+
+
+def rmsnorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def linear(
+    p,
+    x: jax.Array,
+    *,
+    sparsity: Optional[SparsityConfig] = None,
+    layer_idx: Optional[int] = None,
+    dap_input: bool = True,
+    first_layer: bool = False,
+) -> jax.Array:
+    """DBB-aware linear: ``x @ w (+ b)``.
+
+    * ``dense`` / ``wdbb`` training: plain matmul (W-DBB is enforced by the
+      trainer's mask, so ``w`` already satisfies the block bound).
+    * ``awdbb``: DAP (top-NNZ per 8-block, straight-through grad) on the
+      input activations first — paper §5.1/§8.1.
+    * serve-packed: ``p`` holds ``w_vals``/``w_mask`` wire-format weights
+      (values + bitmask); the matmul streams compressed weights
+      (`repro.kernels.ops.dbb_matmul`) — the memory-roofline attack.
+    """
+    sp = sparsity
+    if sp is not None and sp.mode == "awdbb" and dap_input and not (
+        first_layer and sp.exclude_first_layer
+    ):
+        spec = sp.a_spec(layer_idx)
+        if spec is not None and x.shape[-1] % spec.bz == 0:
+            x = apply_dap(x, spec)
+
+    if "w_vals" in p:  # packed serving weights
+        cfg = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
+        lead = x.shape[:-1]
+        y2 = ops.dbb_matmul(
+            x.reshape(-1, x.shape[-1]),
+            p["w_vals"],
+            p["w_mask"],
+            cfg,
+            impl="jnp",
+            out_dtype=x.dtype,
+        )
+        y = y2.reshape(*lead, y2.shape[-1])
+    else:
+        y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def pack_linear_params(p, sp: SparsityConfig):
+    """Convert a dense linear param dict to packed DBB wire format.
+
+    Handles both plain ``[K, N]`` weights and layer-stacked ``[L, K, N]``
+    (scan layout) — the stack dim is vmapped, so scanning slices the
+    packed tensors exactly like dense ones.
+    """
+    cfg = dbb.DBBConfig(sp.w_nnz, sp.bz)
+    w = p["w"]
+    if w.ndim == 3:
+        w_vals, w_mask = jax.vmap(lambda wi: ops.pack_weight(wi, cfg))(w)
+    else:
+        w_vals, w_mask = ops.pack_weight(w, cfg)
+    out = {"w_vals": w_vals, "w_mask": w_mask}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def mlp_forward(p, x, *, act: str, sparsity=None, layer_idx=None):
+    """Gated (swiglu) or plain (gelu) MLP with DBB hooks on both matmuls."""
+    kw = dict(sparsity=sparsity, layer_idx=layer_idx)
+    if act == "swiglu":
+        g = linear(p["gate"], x, **kw)
+        u = linear(p["up"], x, **kw)
+        h = silu(g) * u
+    else:
+        h = jax.nn.gelu(linear(p["up"], x, **kw), approximate=True)
+    return linear(p["down"], h, **kw)
+
+
+def make_mlp(key, d: int, f: int, *, act: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    if act == "swiglu":
+        params["gate"], specs["gate"] = make_linear(ks[0], d, f, dtype=dtype, spec=P(DATA, MODEL))
+        params["up"], specs["up"] = make_linear(ks[1], d, f, dtype=dtype, spec=P(DATA, MODEL))
+    else:
+        params["up"], specs["up"] = make_linear(ks[1], d, f, dtype=dtype, spec=P(DATA, MODEL))
+    params["down"], specs["down"] = make_linear(ks[2], f, d, dtype=dtype, spec=P(MODEL, DATA))
+    return params, specs

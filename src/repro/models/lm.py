@@ -1,0 +1,315 @@
+"""Decoder-only LM covering every assigned non-enc-dec architecture:
+dense GQA (granite/qwen/starcoder2), MLA (minicpm3), VLM backbone
+(qwen2-vl, M-RoPE + patch-embed stub), MoE (granite-moe / phi3.5-moe),
+SSM (mamba2), and hybrid (hymba).
+
+Layers are homogeneous per arch, so parameters are stacked ``[L, ...]``
+and the forward pass is a single ``lax.scan`` (+ per-layer remat), which
+keeps HLO size flat in depth — essential for the 80-compile dry-run
+matrix and standard practice at scale.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import blocks, rope, ssm as ssm_mod
+from repro.models.common import (
+    BATCH_AXES,
+    DATA,
+    MODEL,
+    dtype_of,
+    linear,
+    make_embedding,
+    make_linear,
+    make_norm,
+    rmsnorm,
+)
+
+
+def _stack_specs(specs, n_layers):
+    """Prepend a (None) layer axis to every PartitionSpec leaf."""
+    return jax.tree_util.tree_map(
+        lambda s: P(None, *s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def init_lm(cfg, key):
+    """Returns (params, specs)."""
+    dtype = dtype_of(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["embed"], specs["embed"] = make_embedding(
+        k_embed, cfg.padded_vocab, cfg.d_model, dtype=dtype
+    )
+
+    def one_layer(k):
+        if cfg.family == "ssm":
+            p, _ = ssm_mod.make_mamba2(k, cfg, dtype)
+            n, _ = make_norm(cfg.d_model)
+            return {"mixer": p, "ln": n}
+        return blocks.make_decoder_block(k, cfg, dtype)[0]
+
+    if cfg.family == "ssm":
+        mixer_specs, _ = None, None
+        sp_m = ssm_mod.make_mamba2(jax.random.PRNGKey(0), cfg, dtype)[1]
+        sp_n = make_norm(cfg.d_model)[1]
+        layer_specs = {"mixer": sp_m, "ln": sp_n}
+    else:
+        layer_specs = blocks.make_decoder_block(jax.random.PRNGKey(0), cfg, dtype)[1]
+
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(one_layer)(keys)
+    specs["layers"] = _stack_specs(layer_specs, cfg.n_layers)
+
+    params["final_norm"], specs["final_norm"] = make_norm(cfg.d_model)
+    if cfg.tie_embeddings:
+        pass  # reuse embed
+    else:
+        params["lm_head"], specs["lm_head"] = make_linear(
+            k_head, cfg.d_model, cfg.padded_vocab, dtype=dtype, spec=P(DATA, MODEL)
+        )
+    return params, specs
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def scan_over_layers(body, carry, xs, cfg):
+    """lax.scan over stacked layer params, or an unrolled python loop when
+    ``cfg.scan_layers`` is False (dry-run cost extraction — XLA's
+    cost_analysis counts a while body once, so unrolled variants provide
+    the per-layer costs).  ``xs`` is a pytree stacked on axis 0."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(cfg.n_layers):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a, 0), *ys)
+    return carry, stacked
+
+
+def _rope_cs(cfg, positions, pos3=None):
+    """Hoist cos/sin out of the layer scan (shared by all layers)."""
+    dh = cfg.head_dim()
+    if cfg.m_rope_sections is not None and pos3 is not None:
+        return rope.mrope_cos_sin(pos3, dh, cfg.rope_theta, cfg.m_rope_sections)
+    return rope.rope_cos_sin(positions, dh, cfg.rope_theta)
+
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    return x
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"]
+        return jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    return linear(params["lm_head"], x, sparsity=None)
+
+
+def forward(
+    params,
+    tokens: jax.Array,  # [B, S]
+    cfg,
+    *,
+    positions: Optional[jax.Array] = None,  # [B, S]
+    pos3: Optional[jax.Array] = None,  # [3, B, S] (M-RoPE / VLM)
+    patch_embeds: Optional[jax.Array] = None,  # [B, S_vis, d] (VLM stub)
+):
+    """Full-sequence forward (training / prefill).  Returns (logits, aux)."""
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    rope_cs = None
+    if cfg.family != "ssm" and cfg.mla is None:
+        rope_cs = _rope_cs(cfg, positions, pos3)
+
+    if cfg.family == "ssm":
+
+        def body(carry, layer_p):
+            h = rmsnorm(carry, layer_p["ln"], cfg.norm_eps)
+            y, _ = ssm_mod.mamba2_forward(layer_p["mixer"], h, cfg)
+            return carry + y, jnp.zeros((), jnp.float32)
+
+    else:
+
+        def body(carry, layer_p):
+            y, _, aux = blocks.decoder_block(
+                layer_p, carry, cfg, positions, rope_cs=rope_cs
+            )
+            return y, aux
+
+    x, auxs = scan_over_layers(_remat(body, cfg), x, params["layers"], cfg)
+    logits = _head(params, x, cfg)
+    return logits, jnp.sum(auxs)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def make_cache(cfg, batch: int, max_seq: int):
+    """Stacked ring-buffer cache sized for ``max_seq`` (or the window)."""
+    dtype = dtype_of(cfg.dtype)
+    window = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
+    cache = {}
+    if cfg.family == "ssm":
+        return ssm_mod.make_ssm_cache(batch, cfg, cfg.n_layers, dtype)
+    kv_dim = cfg.kv_dim()
+    v_dim = 1 if cfg.mla is not None else kv_dim
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, batch, window, kv_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, window, v_dim), dtype),
+        "pos": jnp.full((cfg.n_layers, batch, window), -1, jnp.int32),
+    }
+    if cfg.family == "hybrid":
+        ssm_cache = ssm_mod.make_ssm_cache(batch, cfg, cfg.n_layers, dtype)
+        cache["ssm_state"] = ssm_cache["state"]
+        cache["ssm_conv"] = ssm_cache["conv"]
+    return cache
+
+
+def cache_specs(cfg):
+    if cfg.family == "ssm":
+        return ssm_mod.ssm_cache_specs()
+    if cfg.mla is None:
+        # GQA ring buffer: WINDOW sharded over `model` (sequence-parallel
+        # flash-decode, attention.flash_decode) — kv-head counts rarely
+        # divide the model axis (8 or 5 vs 16), and kv-dim sharding makes
+        # GSPMD all-gather the cache in f32 every layer (§Perf-A2).
+        out = {
+            "k": P(None, DATA, MODEL, None),
+            "v": P(None, DATA, MODEL, None),
+            "pos": P(None, DATA, MODEL),
+        }
+    else:  # MLA latent cache: shared across heads, contract over latent
+        out = {
+            "k": P(None, DATA, None, MODEL),
+            "v": P(None, DATA, None, None),
+            "pos": P(None, DATA, None),
+        }
+    if cfg.family == "hybrid":
+        s = ssm_mod.ssm_cache_specs()
+        out["ssm_state"] = s["state"]
+        out["ssm_conv"] = s["conv"]
+    return out
+
+
+def decode_step(params, cache, tokens: jax.Array, pos, cfg):
+    """One decode step.  tokens [B, 1]; pos scalar int32 (current position).
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    b = tokens.shape[0]
+    x = _embed(params, tokens, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos3 = None
+    if cfg.m_rope_sections is not None:
+        pos3 = jnp.broadcast_to(positions[None], (3, b, 1))
+    rope_cs = None
+    if cfg.family != "ssm" and cfg.mla is None:
+        rope_cs = _rope_cs(cfg, positions, pos3)
+
+    if cfg.family == "ssm":
+
+        def body(carry, inp):
+            layer_p, cache_layer = inp
+            h = rmsnorm(carry, layer_p["ln"], cfg.norm_eps)
+            y, new_c = ssm_mod.mamba2_forward(
+                layer_p["mixer"], h, cfg, cache_layer=cache_layer
+            )
+            return carry + y, new_c
+
+        x, new_cache = scan_over_layers(body, x, (params["layers"], cache), cfg)
+    else:
+
+        def body(carry, inp):
+            layer_p, cache_layer = inp
+            y, new_c, _ = blocks.decoder_block(
+                layer_p, carry, cfg, positions,
+                cache_layer=cache_layer, decode_pos=pos, rope_cs=rope_cs,
+            )
+            return y, new_c
+
+        x, new_cache = scan_over_layers(body, x, (params["layers"], cache), cfg)
+    logits = _head(params, x, cfg)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg, cache=None):
+    """Prefill: forward pass; if ``cache`` given, also fills it and returns
+    (logits, cache) — logits only otherwise."""
+    logits, _ = forward(params, tokens, cfg)
+    if cache is None:
+        return logits
+    # fill cache by re-projecting K/V per layer (simple, compile-friendly):
+    # serving engines call this once per request; see repro/serve/engine.py.
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = _embed(params, tokens, cfg)
+    rope_cs = None
+    if cfg.family != "ssm" and cfg.mla is None:
+        rope_cs = _rope_cs(cfg, positions)
+
+    def body(carry, inp):
+        layer_p, cache_layer = inp
+        if cfg.family == "ssm":
+            h = rmsnorm(carry, layer_p["ln"], cfg.norm_eps)
+            y, new_c = ssm_mod.mamba2_forward(layer_p["mixer"], h, cfg)
+            # state fill for SSM prefill uses the chunked path's final state;
+            # engines re-run decode for exactness. Keep conv tail + zero state.
+            new_cache = dict(cache_layer)
+            return carry + y, new_cache
+        y, _, _ = blocks.decoder_block(layer_p, carry, cfg, positions, rope_cs=rope_cs)
+        # recompute k/v for the cache fill
+        h = rmsnorm(carry, layer_p["ln1"], cfg.norm_eps)
+        window = cache_layer["k"].shape[1]
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim()
+        if cfg.mla is None:
+            k = linear(layer_p["attn"]["wk"], h).reshape(b, s, kvh, dh)
+            v = linear(layer_p["attn"]["wv"], h).reshape(b, s, kvh * dh)
+            k = rope.apply_rope(k, *rope_cs).reshape(b, s, kvh * dh)
+        else:
+            m = cfg.mla
+            kv = linear(layer_p["attn"]["kv_down"], h)
+            c_kv = rmsnorm(kv[..., : m.kv_lora_rank], layer_p["attn"]["kv_norm"])
+            kr = kv[..., m.kv_lora_rank :][:, :, None, :]
+            cs2 = rope.rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+            kr = rope.apply_rope(kr, *cs2)[:, :, 0, :]
+            k = jnp.concatenate([c_kv, kr], axis=-1)
+            v = jnp.zeros((b, s, 1), k.dtype)
+        take = min(window, s)
+        sel = jnp.arange(s - take, s)
+        slots = jnp.mod(sel, window)
+        new_cache = dict(cache_layer)
+        new_cache["k"] = cache_layer["k"].at[:, slots].set(k[:, sel])
+        new_cache["v"] = cache_layer["v"].at[:, slots].set(v[:, sel])
+        new_cache["pos"] = cache_layer["pos"].at[:, slots].set(
+            jnp.broadcast_to(sel, (b, take)).astype(jnp.int32)
+        )
+        return y, new_cache
+
+    _, new_cache = scan_over_layers(body, x, (params["layers"], cache), cfg)
+    return logits, new_cache

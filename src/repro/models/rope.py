@@ -1,0 +1,60 @@
+"""Rotary position embeddings: standard RoPE, M-RoPE (Qwen2-VL), and the
+decoupled-RoPE helper used by MLA (MiniCPM3)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _inv_freq(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def rope_cos_sin(pos: jax.Array, dh: int, theta: float):
+    """pos [..., S] int -> cos/sin [..., S, dh//2] float32."""
+    freqs = pos.astype(jnp.float32)[..., None] * _inv_freq(dh, theta)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [B, S, H, D] with cos/sin [B, S, D//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_cos_sin(
+    pos3: jax.Array, dh: int, theta: float, sections: Sequence[int]
+):
+    """M-RoPE (Qwen2-VL §2.1): three position streams (t, h, w) interleaved
+    by frequency sections.
+
+    ``pos3 [3, B, S]``; ``sections`` sum to ``dh // 2`` (e.g. (16, 24, 24)
+    for dh=128).  Frequency index i uses stream 0/1/2 according to which
+    section it falls in.  Returns cos/sin ``[B, S, dh//2]``.
+    """
+    assert sum(sections) == dh // 2, (sections, dh)
+    cos_all, sin_all = rope_cos_sin(pos3, dh, theta)  # [3, B, S, dh//2]
+    sel = jnp.concatenate(
+        [jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)]
+    )  # [dh//2]
+    one_hot = jax.nn.one_hot(sel, 3, dtype=jnp.float32)  # [dh//2, 3]
+    cos = jnp.einsum("tbsf,ft->bsf", cos_all, one_hot)
+    sin = jnp.einsum("tbsf,ft->bsf", sin_all, one_hot)
+    return cos, sin
+
+
+def sinusoidal_embedding(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table [n_pos, d] (float32)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10_000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,222 @@
+"""Mamba2 mixer — SSD (state-space duality) algorithm, arXiv:2405.21060.
+
+Train/prefill uses the chunked SSD form: within-chunk quadratic
+(attention-like) term + across-chunk linear state recurrence via
+``lax.scan``.  Decode is the O(1) recurrent update carrying
+``state [B, H, P, N]`` and a small causal-conv ring buffer.
+
+DBB hooks: the in/out projections are DBB-aware linears (W-DBB/DAP); the
+SSD state recurrence itself stays dense (see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import DATA, MODEL, linear, make_linear, make_norm, rmsnorm, silu
+
+
+def conv_dim(cfg) -> int:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    return di + 2 * s.ngroups * s.d_state
+
+
+def make_mamba2(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    cd = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    d_in_proj = 2 * di + 2 * s.ngroups * s.d_state + nh
+    params["in_proj"], specs["in_proj"] = make_linear(
+        ks[0], d, d_in_proj, dtype=dtype, spec=P(DATA, MODEL)
+    )
+    params["conv_w"] = (
+        jax.random.normal(ks[1], (s.d_conv, cd), jnp.float32) * 0.2
+    ).astype(dtype)
+    specs["conv_w"] = P(None, MODEL)
+    params["conv_b"] = jnp.zeros((cd,), dtype)
+    specs["conv_b"] = P(MODEL)
+    params["A_log"] = jnp.zeros((nh,), jnp.float32)  # A = -exp(A_log) = -1
+    specs["A_log"] = P(None)
+    params["D"] = jnp.ones((nh,), jnp.float32)
+    specs["D"] = P(None)
+    params["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    specs["dt_bias"] = P(None)
+    params["norm"], specs["norm"] = make_norm(di)
+    params["out_proj"], specs["out_proj"] = make_linear(
+        ks[3], di, d, dtype=dtype, spec=P(MODEL, DATA)
+    )
+    return params, specs
+
+
+def make_ssm_cache(batch: int, cfg, n_layers: int, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    nh, hd = s.n_heads(d), s.headdim
+    return {
+        "state": jnp.zeros((n_layers, batch, nh, hd, s.d_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.d_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def ssm_cache_specs():
+    return {
+        "state": P(None, DATA, None, None, None),
+        "conv": P(None, DATA, None, MODEL),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gs = s.ngroups * s.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gs]
+    dt = zxbcdt[..., di + di + 2 * gs :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv over seq.  xbc [B,S,C]; conv_w [K,C]."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    out = sum(
+        pad[:, i : i + s, :] * conv_w[i][None, None, :] for i in range(k)
+    )
+    return silu(out + conv_b[None, None, :])
+
+
+def mamba2_forward(p, u, cfg, *, layer_idx=None, cache_layer=None):
+    """u [B, S, d] -> y [B, S, d].
+
+    cache_layer (decode): {"state": [B,H,P,N] f32, "conv": [B,K-1,C]}.
+    """
+    s_cfg = cfg.ssm
+    b, s, d = u.shape
+    di = s_cfg.d_inner(d)
+    nh, hd, ds, g = s_cfg.n_heads(d), s_cfg.headdim, s_cfg.d_state, s_cfg.ngroups
+    sp, li = cfg.sparsity, layer_idx
+
+    zxbcdt = linear(p["in_proj"], u, sparsity=sp, layer_idx=li)
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+
+    if cache_layer is not None:
+        assert s == 1
+        conv_buf = jnp.concatenate([cache_layer["conv"], xbc], axis=1)  # [B,K,C]
+        kk = p["conv_w"].shape[0]
+        xbc_t = silu(
+            jnp.einsum("bkc,kc->bc", conv_buf[:, -kk:, :], p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        new_conv = conv_buf[:, 1:, :]
+        x_, B_, C_ = (
+            xbc_t[..., :di],
+            xbc_t[..., di : di + g * ds],
+            xbc_t[..., di + g * ds :],
+        )
+        xh = x_.reshape(b, nh, hd).astype(jnp.float32)
+        Bh = B_.reshape(b, g, ds).astype(jnp.float32)
+        Ch = C_.reshape(b, g, ds).astype(jnp.float32)
+        rep = nh // g
+        Bh = jnp.repeat(Bh, rep, axis=1)  # [B,H,N]
+        Ch = jnp.repeat(Ch, rep, axis=1)
+        dt1 = dt[:, 0, :]  # [B,H]
+        decay = jnp.exp(dt1 * A[None, :])  # [B,H]
+        state = cache_layer["state"]
+        state = state * decay[..., None, None] + (
+            (dt1[..., None] * xh)[..., None] * Bh[:, :, None, :]
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + p["D"][None, :, None] * xh
+        y = y.reshape(b, 1, di).astype(u.dtype)
+        y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+        out = linear(p["out_proj"], y, sparsity=sp, layer_idx=li)
+        return out, {"state": state, "conv": new_conv}
+
+    # ---------------- chunked SSD (train / prefill) ----------------
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    q = min(s_cfg.chunk, s)
+    pad = (q - s % q) % q  # causal: end-padding never affects real outputs
+    s_p = s + pad
+    if pad:
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    x_ = xbc[..., :di].reshape(b, s_p, nh, hd)
+    B_ = xbc[..., di : di + g * ds].reshape(b, s_p, g, ds)
+    C_ = xbc[..., di + g * ds :].reshape(b, s_p, g, ds)
+    rep = nh // g
+    nc = s_p // q
+
+    # Intra-chunk tensors stay in the model dtype (bf16 on TPU): the
+    # [B,nc,H,Q,Q] score tensor and the x/B/C copies dominate the memory
+    # roofline term of SSD training (measured 2x on hymba train_4k,
+    # §Perf-C); einsums still accumulate in f32 (preferred_element_type).
+    cdt = u.dtype
+    xf = x_.reshape(b, nc, q, nh, hd).astype(cdt)
+    Bf = B_.reshape(b, nc, q, g, ds).astype(cdt)
+    Cf = C_.reshape(b, nc, q, g, ds).astype(cdt)
+    dtf = dt.reshape(b, nc, q, nh)  # f32 (decay math stays f32)
+    a = dtf * A[None, None, None, :]  # log-decay, <=0
+    cum = jnp.cumsum(a, axis=2)  # [B,nc,Q,H]
+
+    # intra-chunk quadratic term
+    Br = jnp.repeat(Bf, rep, axis=3)  # [B,nc,Q,H,N]
+    Cr = jnp.repeat(Cf, rep, axis=3)
+    # every [B,nc,H,Q,Q]-sized tensor is produced directly in the model
+    # dtype (exp->convert fuses; einsum emits cdt) — an f32 intermediate
+    # here doubles the dominant memory-roofline traffic (§Perf-C1/C1')
+    scores = jnp.einsum("bcthn,bcshn->bchts", Cr, Br)  # cdt out, f32 accum
+    cum_h = cum.transpose(0, 1, 3, 2)  # [B,nc,H,Q] (f32, small)
+    decay_mat = jnp.exp(
+        jnp.clip(cum_h[..., :, None] - cum_h[..., None, :], -60.0, 0.0)
+    ).astype(cdt)  # [B,nc,H,t,s]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    dt_h = dtf.transpose(0, 1, 3, 2).astype(cdt)  # [B,nc,H,Q]
+    scores = (scores * decay_mat * tri[None, None, None]
+              * dt_h[..., None, :])
+    y_intra = jnp.einsum(
+        "bchts,bcshp->bcthp", scores, xf, preferred_element_type=jnp.float32
+    )
+
+    # chunk states: S_c = sum_s exp(cum_end - cum_s) dt_s x_s B_s^T
+    decay_to_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60, 0))  # [B,nc,Q,H]
+    wgt = (decay_to_end * dtf).astype(cdt)
+    chunk_state = jnp.einsum(
+        "bcshp,bcshn->bchpn", xf * wgt[..., None], Br,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence
+    total = jnp.exp(jnp.clip(cum[:, :, -1, :], -60, 0))  # [B,nc,H]
+
+    def step(h, inp):
+        cs, tot = inp  # [B,H,P,N], [B,H]
+        h_new = h * tot[..., None, None] + cs
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    _, h_in = jax.lax.scan(
+        step,
+        h0,
+        (chunk_state.swapaxes(0, 1), total.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum(
+        "bcthn,bchpn->bcthp",
+        (Cr.astype(jnp.float32) * jnp.exp(jnp.clip(cum, -60, 0))[..., None]).astype(cdt),
+        h_in.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(b, s_p, nh, hd)[:, :s]
+    y = y + p["D"][None, None, :, None] * x_[:, :s].astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+    return linear(p["out_proj"], y, sparsity=sp, layer_idx=li), None

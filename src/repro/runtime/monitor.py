@@ -1,0 +1,71 @@
+"""Runtime health: step-time tracking, straggler detection, preemption
+hooks.  On a real multi-host deployment each host reports its step wall
+time; hosts whose rolling time exceeds the fleet median by
+``threshold``× are flagged (and, with an orchestrator, drained/replaced).
+Here the same logic runs over per-step samples so it is fully unit-tested.
+"""
+
+from __future__ import annotations
+
+import collections
+import statistics
+import time
+
+
+class StepTimer:
+    def __init__(self, window: int = 20):
+        self.times = collections.deque(maxlen=window)
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class StragglerDetector:
+    """Flags hosts whose rolling median step time exceeds the fleet median
+    by ``threshold``x (default 1.5x, typical production setting)."""
+
+    def __init__(self, n_hosts: int, window: int = 20, threshold: float = 1.5):
+        self.threshold = threshold
+        self.hosts = [collections.deque(maxlen=window) for _ in range(n_hosts)]
+
+    def report(self, host_id: int, step_time: float):
+        self.hosts[host_id].append(step_time)
+
+    def stragglers(self):
+        meds = [
+            statistics.median(h) if h else None for h in self.hosts
+        ]
+        known = [m for m in meds if m is not None]
+        if not known:
+            return []
+        fleet = statistics.median(known)
+        return [
+            i
+            for i, m in enumerate(meds)
+            if m is not None and fleet > 0 and m > self.threshold * fleet
+        ]
+
+
+class PreemptionGuard:
+    """Cooperative preemption: orchestrators signal shutdown; the training
+    loop checks ``should_stop`` each step and checkpoints before exit."""
+
+    def __init__(self):
+        self._stop = False
+
+    def signal(self):
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop

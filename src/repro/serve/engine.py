@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + greedy/temperature decode over the
+model zoo, with DBB-packed serving weights as an option (the paper's
+technique applied to inference bandwidth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbb
+from repro.models import common, encdec, lm
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
+
+
+def pack_params_for_serving(params, cfg):
+    """Convert every DBB-eligible linear to packed wire format."""
+    sp = cfg.sparsity
+
+    def walk(p, path=""):
+        if isinstance(p, dict):
+            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3):
+                name = path.lower()
+                eligible = (
+                    # kv_up stays dense: MLA's absorbed decode reads its
+                    # raw weight tensor per head (attention.py)
+                    not any(s in name for s in
+                            ("embed", "router", "norm", "ln", "kv_up"))
+                    and p["w"].shape[-2] % sp.bz == 0
+                )
+                if eligible:
+                    return common.pack_linear_params(p, sp)
+            return {k: walk(v, path + "/" + k) for k, v in p.items()}
+        return p
+
+    return walk(params)
+
+
+class Engine:
+    """Greedy decoding engine for a batch of prompts."""
+
+    def __init__(self, params, cfg, scfg: ServeConfig):
+        self.cfg, self.scfg = cfg, scfg
+        if scfg.pack_weights and cfg.sparsity.mode in ("wdbb", "awdbb"):
+            params = pack_params_for_serving(params, cfg)
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
+        )
+
+    def generate(self, prompts: np.ndarray, n_tokens: int):
+        """prompts [B, S0] int32 -> tokens [B, S0 + n_tokens]."""
+        cfg = self.cfg
+        b, s0 = prompts.shape
+        cache = lm.make_cache(cfg, b, self.scfg.max_seq)
+        toks = jnp.asarray(prompts)
+        # prefill by stepping (exact for every family incl. SSM/hybrid)
+        logits = None
+        for t in range(s0):
+            logits, cache = self._decode(
+                self.params, cache, toks[:, t : t + 1], jnp.int32(t)
+            )
+        out = [toks]
+        v = cfg.vocab  # slice off vocab padding before argmax
+        cur = jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+        for i in range(n_tokens):
+            out.append(cur)
+            logits, cache = self._decode(
+                self.params, cache, cur, jnp.int32(s0 + i)
+            )
+            cur = jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,48 @@
+"""Distribution context: lets model code opt into explicit shard_map
+regions (manual collectives) when a mesh is active.
+
+GSPMD handles most of the model well, but a few patterns defeat its
+propagation (batched scatter/gather in the MoE dispatch replicates the
+activation tensor).  The launchers set this context; model code asks
+``expert_parallel_axes()`` and, when present, uses the hand-written
+all-to-all path.  Unit tests run without a context (single device) and
+take the pure-pjit path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class DistContext:
+    mesh: object  # jax.sharding.Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+    expert_axis: str = "model"
+
+
+_CTX: Optional[DistContext] = None
+
+
+def set_context(ctx: Optional[DistContext]):
+    global _CTX
+    _CTX = ctx
+
+
+def get_context() -> Optional[DistContext]:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, batch_axes=("data",), expert_axis="model"):
+    prev = _CTX
+    set_context(DistContext(mesh=mesh, batch_axes=tuple(batch_axes),
+                            expert_axis=expert_axis))
+    try:
+        yield
+    finally:
+        set_context(prev)

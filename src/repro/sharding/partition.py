@@ -1,0 +1,75 @@
+"""Sharding utilities: spec sanitization against a concrete mesh, and
+NamedSharding builders for params / batches / caches.
+
+Specs written in the model code express *intent*; meshes differ (16x16
+single pod, 2x16x16 multi-pod, 1-device CPU).  ``sanitize`` drops mesh
+axes that don't divide a dim evenly (e.g. vocab=49155 over model=16) and
+axes absent from the mesh (e.g. ``pod`` on the single-pod mesh), so one
+set of annotations serves every target — including elastic rescales.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= _axis_size(mesh, a)
+        return n
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+
+
+def _present(mesh: Mesh, axis) -> bool:
+    if isinstance(axis, (tuple, list)):
+        return all(_present(mesh, a) for a in axis)
+    return axis in mesh.axis_names
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that are absent from the mesh or don't divide the dim."""
+    if spec is None:
+        return P()
+    out = []
+    for i, axis in enumerate(spec):
+        if axis is None or i >= len(shape):
+            out.append(None)
+            continue
+        # trim tuple axes left-to-right until they divide evenly
+        axes = list(axis) if isinstance(axis, (tuple, list)) else [axis]
+        axes = [a for a in axes if _present(mesh, a)]
+        while axes and shape[i] % _axis_size(mesh, tuple(axes)) != 0:
+            axes.pop()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, spec_tree, shape_tree):
+    """NamedSharding pytree from (spec intent, abstract shapes)."""
+    def one(spec, like):
+        return NamedSharding(mesh, sanitize(spec, np.shape(like), mesh))
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, shape_tree, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def batch_spec(multi_pod: bool, extra_dims: int = 1) -> P:
+    """Batch dim sharded over (pod, data); remaining dims replicated."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+    return P(axes, *([None] * extra_dims))
+
+
+def device_put_tree(tree, shardings):
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)

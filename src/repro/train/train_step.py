@@ -1,0 +1,110 @@
+"""The jitted training step: CE loss (+ MoE aux), grad, clip, AdamW,
+W-DBB mask projection, optional int8 gradient compression with error
+feedback.  Pure function of (params, opt_state, batch, masks) — pjit
+shards it across the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.train import compression, optimizer
+
+
+def loss_fn(params, batch, cfg):
+    if cfg.family == "encdec":
+        logits, aux = encdec.forward(params, batch["frames"], batch["tokens"], cfg)
+    else:
+        kw = {}
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = batch.get("patch_embeds")
+            if "pos3" in batch:
+                kw["pos3"] = batch["pos3"]
+        logits, aux = lm.forward(params, batch["tokens"], cfg, **kw)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM: vision prefix carries no loss
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], axis=1
+        )
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logits_f = logits.astype(jnp.float32)
+    if logits.shape[-1] != cfg.vocab:  # mask vocab padding (sharded, no comms)
+        vocab_ids = jax.lax.broadcasted_iota(
+            jnp.int32, logits_f.shape, logits_f.ndim - 1
+        )
+        logits_f = jnp.where(vocab_ids < cfg.vocab, logits_f, -1e30)
+    logz = jax.nn.logsumexp(logits_f, axis=-1)
+    gold = jnp.take_along_axis(logits_f, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(jnp.where(valid, logz - gold, 0.0)) / jnp.maximum(
+        1.0, jnp.sum(valid)
+    )
+    acc = jnp.sum(
+        jnp.where(valid, (jnp.argmax(logits_f, -1) == safe).astype(jnp.float32), 0.0)
+    ) / jnp.maximum(1.0, jnp.sum(valid))
+    return ce + aux, {"ce": ce, "aux": aux, "acc": acc}
+
+
+def train_step(
+    params,
+    opt_state: optimizer.OptState,
+    batch,
+    *,
+    cfg,
+    opt_cfg: optimizer.OptimizerConfig,
+    masks=None,
+    residuals=None,
+):
+    """Returns (params, opt_state, metrics[, residuals]).
+
+    ``masks``: W-DBB keep-mask pytree — grads and updated params are
+    projected so weights stay inside the block bound between mask
+    refreshes (paper §8.1 progressive pruning).
+    ``residuals``: error-feedback state; enables int8 gradient
+    compression of the DP reduce when provided.
+    """
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg
+    )
+    if masks is not None:
+        grads = jax.tree_util.tree_map(
+            lambda g, m: jnp.where(m, g, jnp.zeros_like(g)) if m.shape == g.shape else g,
+            grads,
+            masks,
+        )
+    new_residuals = None
+    if residuals is not None:
+        qtree, new_residuals = compression.compress_tree(grads, residuals)
+        grads = compression.decompress_tree(qtree)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g.astype(p.dtype), grads, params
+        )
+    new_params, new_state, opt_metrics = optimizer.update(
+        opt_cfg, grads, opt_state, params
+    )
+    if masks is not None:
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: jnp.where(m, p, jnp.zeros_like(p)) if m.shape == p.shape else p,
+            new_params,
+            masks,
+        )
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    if residuals is not None:
+        return new_params, new_state, metrics, new_residuals
+    return new_params, new_state, metrics
+
+
+def make_jitted_train_step(cfg, opt_cfg, donate=True, with_masks=False):
+    fn = functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg)
+
+    def stepper(params, opt_state, batch, masks=None):
+        return fn(params, opt_state, batch, masks=masks)
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(stepper, donate_argnums=donate_argnums)

@@ -1,0 +1,127 @@
+"""Host-side training loop: data, W-DBB pruning schedule, checkpointing,
+straggler monitoring, preemption-safe resume.  Works on 1 CPU device
+(tests/examples) and on the production mesh (launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.core import dbb, schedule as wdbb_schedule
+from repro.models import encdec, lm
+from repro.runtime.monitor import PreemptionGuard, StepTimer
+from repro.train import optimizer, train_step as ts
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    wdbb: Optional[wdbb_schedule.WDBBSchedule] = None
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: optimizer.OptimizerConfig,
+                 tcfg: TrainerConfig, data_it, key=None):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.data = data_it
+        key = key if key is not None else jax.random.PRNGKey(0)
+        init_fn = encdec.init_encdec if cfg.family == "encdec" else lm.init_lm
+        self.params, self.specs = init_fn(cfg, key)
+        self.opt_state = optimizer.init(self.params)
+        self.step = 0
+        self.guard = PreemptionGuard()
+        self.timer = StepTimer()
+        self.masks = None
+        self._stepper = jax.jit(
+            lambda p, s, b, m: ts.train_step(
+                p, s, b, cfg=cfg, opt_cfg=opt_cfg, masks=m
+            ),
+            donate_argnums=(0, 1),
+        )
+        if tcfg.ckpt_dir and ckpt.latest_step(tcfg.ckpt_dir) is not None:
+            self.restore()
+
+    # ------------------------------------------------------------- wdbb
+    def _refresh_masks(self):
+        sched = self.tcfg.wdbb
+        if sched is None:
+            return
+        if not sched.should_update(self.step) and self.masks is not None:
+            return
+        cfg_now = sched.cfg_at(self.step)
+        self.masks = wdbb_schedule.wdbb_masks(
+            self.params, cfg_now, predicate=self._prune_predicate
+        )
+
+    @staticmethod
+    def _prune_predicate(path, w):
+        names = "/".join(str(getattr(k, "key", k)) for k in path)
+        return not any(s in names for s in ("embed", "router", "norm", "ln"))
+
+    # ------------------------------------------------------------- steps
+    def run(self, n_steps: Optional[int] = None):
+        n = n_steps if n_steps is not None else self.tcfg.total_steps
+        history = []
+        target = self.step + n
+        while self.step < target and not self.guard.should_stop:
+            self._refresh_masks()
+            batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+            self.timer.start()
+            self.params, self.opt_state, metrics = self._stepper(
+                self.params, self.opt_state, batch, self.masks
+            )
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time"] = self.timer.stop()
+            self.step += 1
+            history.append(metrics)
+            if self.tcfg.log_every and self.step % self.tcfg.log_every == 0:
+                print(
+                    f"step {self.step:6d} loss {metrics['loss']:.4f} "
+                    f"acc {metrics['acc']:.3f} gnorm {metrics['grad_norm']:.2f} "
+                    f"lr {metrics['lr']:.2e} {metrics['step_time']*1e3:.0f}ms"
+                )
+            if (
+                self.tcfg.ckpt_dir
+                and self.tcfg.ckpt_every
+                and self.step % self.tcfg.ckpt_every == 0
+            ):
+                self.save()
+        if self.tcfg.ckpt_dir and self.guard.should_stop:
+            self.save()  # preemption-safe final checkpoint
+        return history
+
+    # -------------------------------------------------------------- ckpt
+    def save(self):
+        state = {"params": self.params, "opt": self.opt_state}
+        ckpt.save(
+            self.tcfg.ckpt_dir,
+            self.step,
+            state,
+            extra={"data_step": getattr(self.data, "_step", self.step)},
+            keep=self.tcfg.keep_ckpts,
+        )
+
+    def restore(self):
+        state = {"params": self.params, "opt": self.opt_state}
+        restored, manifest = ckpt.restore(self.tcfg.ckpt_dir, state)
+        self.params = jax.tree_util.tree_map(jnp.asarray, restored["params"])
+        self.opt_state = optimizer.OptState(
+            step=jnp.asarray(restored["opt"].step),
+            mu=jax.tree_util.tree_map(jnp.asarray, restored["opt"].mu),
+            nu=jax.tree_util.tree_map(jnp.asarray, restored["opt"].nu),
+        )
+        self.step = manifest["step"]
+        if hasattr(self.data, "seek"):
+            self.data.seek(manifest["extra"].get("data_step", self.step))
+        print(f"restored checkpoint at step {self.step}")

@@ -1,0 +1,177 @@
+"""Per-kernel allclose validation: Pallas (interpret mode) vs pure-jnp oracle.
+
+Sweeps shapes/dtypes parametrically and property-tests the DBB invariants
+with hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dbb
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,k,n,tm,tk,tn",
+    [
+        (8, 32, 128, 8, 32, 128),
+        (32, 64, 256, 16, 32, 128),
+        (64, 128, 128, 32, 64, 128),
+        (16, 256, 384, 16, 128, 128),
+        (128, 64, 128, 64, 64, 128),
+    ],
+)
+@pytest.mark.parametrize("nnz", [2, 4, 8])
+def test_dbb_matmul_kernel_vs_ref(dtype, m, k, n, tm, tk, tn, nnz):
+    cfg = dbb.DBBConfig(nnz, 8)
+    x = rnd((m, k), dtype, 1)
+    w = rnd((k, n), dtype, 2)
+    wv, wm = ops.pack_weight(w, cfg)
+    y_ref = ref.dbb_matmul_ref(x, wv, wm, cfg, out_dtype=jnp.float32)
+    y_k = ops.dbb_matmul(
+        x, wv, wm, cfg, impl="interpret", tm=tm, tk=tk, tn=tn, out_dtype=jnp.float32
+    )
+    tol = TOL[dtype] * k
+    np.testing.assert_allclose(np.array(y_k), np.array(y_ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(16, 64, 128), (32, 128, 256)])
+@pytest.mark.parametrize("nnz_a,nnz_w", [(2, 4), (4, 4), (5, 2)])
+def test_dbb_matmul_aw_kernel_vs_ref(dtype, m, k, n, nnz_a, nnz_w):
+    cfg_a, cfg_w = dbb.DBBConfig(nnz_a, 8), dbb.DBBConfig(nnz_w, 8)
+    x = rnd((m, k), dtype, 3)
+    w = rnd((k, n), dtype, 4)
+    xv, xm = ops.pack_act(x, cfg_a)
+    wv, wm = ops.pack_weight(w, cfg_w)
+    y_ref = ref.dbb_matmul_aw_ref(xv, xm, wv, wm, cfg_a, cfg_w, out_dtype=jnp.float32)
+    y_k = ops.dbb_matmul_aw(
+        xv, xm, wv, wm, cfg_a, cfg_w, impl="interpret",
+        tm=16, tk=64, tn=128, out_dtype=jnp.float32,
+    )
+    tol = TOL[dtype] * k
+    np.testing.assert_allclose(np.array(y_k), np.array(y_ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k", [(8, 64), (16, 128), (32, 256)])
+@pytest.mark.parametrize("nnz", [1, 3, 5])
+def test_dap_kernel_vs_ref(dtype, m, k, nnz):
+    x = rnd((m, k), dtype, 5)
+    p_ref, m_ref = ref.dap_prune_ref(x, nnz, 8)
+    p_k, m_k = ops.dap_prune(x, nnz, 8, impl="interpret", tm=8, tk=64)
+    np.testing.assert_allclose(
+        np.array(p_k, np.float32), np.array(p_ref, np.float32)
+    )
+    np.testing.assert_array_equal(np.array(m_k), np.array(m_ref))
+
+
+# ---------------------------------------------------------------- properties
+
+
+@given(
+    m=st.integers(1, 6),
+    nblk=st.integers(1, 6),
+    nnz=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_prop_pack_unpack_roundtrip(m, nblk, nnz, seed):
+    """pack∘unpack == prune for any tensor (pruned tensors are fixpoints)."""
+    cfg = dbb.DBBConfig(nnz, 8)
+    x = rnd((m, nblk * 8), jnp.float32, seed)
+    pruned = dbb.prune(x, cfg)
+    up = dbb.unpack(dbb.pack(x, cfg))
+    np.testing.assert_allclose(np.array(up), np.array(pruned))
+    # bitmask wire format roundtrips too
+    vals, mask = dbb.pack_bitmask(x, cfg)
+    np.testing.assert_allclose(
+        np.array(dbb.expand_bitmask(vals, mask, cfg)), np.array(pruned)
+    )
+
+
+@given(
+    m=st.integers(1, 4),
+    nblk=st.integers(1, 4),
+    nnz=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_prop_dbb_bound_held(m, nblk, nnz, seed):
+    """Every pruned block holds at most NNZ non-zeros; kept values are the
+    top-magnitude ones (no kept value smaller than a dropped one)."""
+    cfg = dbb.DBBConfig(nnz, 8)
+    x = rnd((m, nblk * 8), jnp.float32, seed)
+    p = np.array(dbb.prune(x, cfg)).reshape(m, nblk, 8)
+    xb = np.array(x).reshape(m, nblk, 8)
+    assert (np.sum(p != 0, -1) <= nnz).all()
+    kept = p != 0
+    for i in range(m):
+        for b in range(nblk):
+            if kept[i, b].any() and (~kept[i, b]).any():
+                assert np.abs(xb[i, b][kept[i, b]]).min() >= np.abs(
+                    xb[i, b][~kept[i, b]]
+                ).max() - 1e-6
+
+
+@given(
+    nnz=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_prop_dap_idempotent(nnz, seed):
+    """DAP is a projection: applying it twice == once."""
+    from repro.core.dap import dap
+
+    x = rnd((4, 32), jnp.float32, seed)
+    once = dap(x, nnz, 8)
+    twice = dap(once, nnz, 8)
+    np.testing.assert_allclose(np.array(once), np.array(twice))
+
+
+@given(seed=st.integers(0, 2**31 - 1), nnz=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_prop_wdbb_matmul_linear(seed, nnz):
+    """DBB matmul is linear in x: f(a+b) == f(a)+f(b)."""
+    cfg = dbb.DBBConfig(nnz, 8)
+    a = rnd((4, 32), jnp.float32, seed)
+    b = rnd((4, 32), jnp.float32, seed + 1)
+    w = rnd((32, 128), jnp.float32, seed + 2)
+    wv, wm = ops.pack_weight(w, cfg)
+    fa = ref.dbb_matmul_ref(a, wv, wm, cfg)
+    fb = ref.dbb_matmul_ref(b, wv, wm, cfg)
+    fab = ref.dbb_matmul_ref(a + b, wv, wm, cfg)
+    np.testing.assert_allclose(np.array(fab), np.array(fa + fb), atol=1e-3)
+
+
+def test_dap_ste_gradient():
+    """Gradient of DAP is the binary keep mask (paper §8.1)."""
+    from repro.core.dap import dap
+
+    x = rnd((4, 32), jnp.float32, 7)
+    g = jax.grad(lambda a: jnp.sum(dap(a, 4, 8) * 3.0))(x)
+    mask = np.array(dbb.topk_block_mask(x, dbb.DBBConfig(4, 8)))
+    np.testing.assert_allclose(np.array(g), np.where(mask, 3.0, 0.0))
+
+
+def test_compression_ratio_matches_paper():
+    """4/8 bf16 wire format ≈ 1.78x smaller than dense (bitmask layout)."""
+    cfg = dbb.DBBConfig(4, 8)
+    dense_bytes = 8 * 2
+    packed_bytes = 4 * 2 + 1
+    assert abs(dense_bytes / packed_bytes - 16 / 9) < 1e-9

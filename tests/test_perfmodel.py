@@ -1,0 +1,137 @@
+"""Perfmodel validation against the paper's published numbers, plus
+hypothesis property tests on the model's invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.perfmodel import s2ta
+from repro.perfmodel.workloads import MODELS, typical_conv
+
+
+# ----------------------------------------------------- anchor reproduction
+
+
+def test_anchor_tops_per_w():
+    """Table 4 peak efficiency at 50/50 sparsity (16nm)."""
+    assert abs(s2ta.sa_zvcg(0.5, 0.5).tops_per_w - 10.5) < 0.2
+    assert abs(s2ta.sa_smt(0.5, 0.5).tops_per_w - 8.01) < 0.2
+    assert abs(s2ta.s2ta_w(0.5, 0.5).tops_per_w - 12.4) < 0.3
+    assert abs(s2ta.s2ta_aw(0.5, 0.5).tops_per_w - 14.3) < 0.3
+
+
+def test_anchor_75_crossvalidation():
+    """26.5 TOPS/W at 75% sparsity (Table 4 note 3) — NOT a calibration
+    point; the model must land near it from the 50% anchors alone."""
+    got = s2ta.s2ta_aw(0.25, 0.25).tops_per_w
+    assert abs(got - 26.5) / 26.5 < 0.10, got
+
+
+def test_zvcg_25pct_below_dense():
+    e_sa = s2ta.sa(0.5, 0.5).power_mw
+    e_zv = s2ta.sa_zvcg(0.5, 0.5).power_mw
+    assert abs(1 - e_zv / e_sa - 0.25) < 0.02  # §8.4
+
+
+def test_smt_speedup_fig3():
+    assert abs(s2ta.sa_smt(0.5, 0.5, q=2).speedup - 1.6) < 0.05
+    assert abs(s2ta.sa_smt(0.5, 0.5, q=4).speedup - 1.8) < 0.05
+
+
+def test_smt_energy_worse_than_zvcg():
+    """The paper's central negative result: unstructured-sparsity FIFOs
+    eclipse the speedup — SMT costs MORE energy per op than ZVCG."""
+    lay = typical_conv(0.5, 0.375)
+    z = s2ta.run_layer("sa_zvcg", lay)
+    m = s2ta.run_layer("sa_smt", lay)
+    e_z = z.power_mw * z.time_s
+    e_m = m.power_mw * m.time_s
+    assert e_m > 1.15 * e_z  # paper: +43% (T2Q2)
+
+
+def test_aw_peak_speedup_8x():
+    assert s2ta.s2ta_aw(0.5, 0.125).speedup == 8.0
+    assert s2ta.s2ta_aw(0.5, 1.0).speedup == 1.0  # dense bypass
+    # DAP hardware caps at 5 stages; 6/8..7/8 falls back to dense
+    assert s2ta.s2ta_aw(0.5, 0.75).speedup == 1.0
+
+
+def test_w_speedup_step_at_half():
+    assert s2ta.s2ta_w(0.5, 0.5).speedup == 2.0
+    assert s2ta.s2ta_w(0.6, 0.5).speedup == 1.0  # dense fallback
+
+
+def test_headline_model_ratios():
+    """Fig. 11 headline: S2TA-AW vs SA-ZVCG / S2TA-W / SA-SMT across the
+    four CNNs.  Bands are ±~25% of the paper's averages (2.08x / 1.84x /
+    2.24x energy; 2.11x speedup): see EXPERIMENTS.md for the
+    reconciliation analysis of the residual gap."""
+    es, ss, ew, esm = [], [], [], []
+    for layers in MODELS.values():
+        zv = s2ta.run_model("sa_zvcg", layers)
+        aw = s2ta.run_model("s2ta_aw", layers)
+        w = s2ta.run_model("s2ta_w", layers)
+        sm = s2ta.run_model("sa_smt", layers)
+        es.append(zv["energy_mj"] / aw["energy_mj"])
+        ss.append(zv["time_s"] / aw["time_s"])
+        ew.append(w["energy_mj"] / aw["energy_mj"])
+        esm.append(sm["energy_mj"] / aw["energy_mj"])
+    avg = lambda xs: sum(xs) / len(xs)
+    assert 1.5 <= avg(es) <= 2.6, avg(es)   # paper 2.08
+    assert 1.7 <= avg(ss) <= 3.2, avg(ss)   # paper 2.11
+    assert 1.3 <= avg(ew) <= 2.3, avg(ew)   # paper 1.84
+    assert 1.8 <= avg(esm) <= 2.9, avg(esm)  # paper 2.24
+
+
+def test_table1_ordering():
+    t = s2ta.TABLE1_BUFFERS
+    tot = lambda k: t[k]["operands"] + t[k]["accumulators"]
+    assert tot("S2TA-W") < tot("Systolic Array") < tot("SA-SMT") \
+        < tot("Eyeriss v2") < tot("SparTen") < tot("SCNN")
+    assert tot("SCNN") / tot("S2TA-W") > 1800  # paper: up to ~1886x
+
+
+def test_table2_total_power():
+    bd = s2ta.model_breakdown("s2ta_aw", typical_conv(0.5, 0.5))
+    total = sum(bd.values())
+    assert abs(total - 541.3) / 541.3 < 0.05  # Table 2 total
+
+
+# ------------------------------------------------------------- properties
+
+
+@given(d_w=st.floats(0.05, 1.0), d_a=st.floats(0.05, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_prop_power_positive_and_bounded(d_w, d_a):
+    for d in s2ta.DESIGNS:
+        dp = s2ta.DESIGNS[d](d_w, d_a)
+        assert 0 < dp.power_mw < 2000
+        assert 1.0 <= dp.speedup <= 8.0
+
+
+@given(d_a=st.floats(0.05, 0.62))
+@settings(max_examples=30, deadline=None)
+def test_prop_aw_energy_improves_with_act_sparsity(d_a):
+    """Within the DAP range, sparser activations never cost more energy
+    per op on S2TA-AW."""
+    lay_dense = typical_conv(0.5, 0.625)
+    lay = typical_conv(0.5, d_a)
+    e = lambda l: (lambda r: r.power_mw * r.time_s)(s2ta.run_layer("s2ta_aw", l))
+    assert e(lay) <= e(lay_dense) * 1.001
+
+
+@given(d_w=st.floats(0.05, 1.0), d_a=st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_prop_zvcg_power_monotone_in_density(d_w, d_a):
+    """More zeros (lower density) => less ZVCG power, never more."""
+    p = s2ta.sa_zvcg(d_w, d_a).power_mw
+    p_denser = s2ta.sa_zvcg(min(1.0, d_w + 0.1), min(1.0, d_a + 0.1)).power_mw
+    assert p <= p_denser + 1e-9
+
+
+@given(nnz=st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_prop_stream_ratio(nnz):
+    r = s2ta.dbb_stream_ratio(nnz)
+    assert 0 < r <= 1
+    if nnz < 8:
+        assert r == (nnz + 1) / 8

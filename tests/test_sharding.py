@@ -1,0 +1,95 @@
+"""Sharding utilities + checkpoint manager tests (1-device CPU)."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import partition
+
+
+def test_sanitize_drops_nondivisible():
+    mesh = make_host_mesh()  # (data=1, model=n)
+    n = mesh.devices.size
+    # dim 7 is not divisible by anything > 1; dim 16 divisible by 1
+    spec = partition.sanitize(P("model", "data"), (7, 16), mesh)
+    if n > 1:
+        assert spec[0] is None
+    assert spec == P(None, "data") or spec == P("model", "data")
+
+
+def test_sanitize_drops_absent_axes():
+    mesh = make_host_mesh()
+    spec = partition.sanitize(P(("pod", "data"), "model"), (8, 8), mesh)
+    # 'pod' absent on host mesh: tuple trimmed to ('data',)
+    assert spec[0] in ("data", ("data",), None)
+
+
+def test_sanitize_tuple_trim():
+    """Trimming logic against a fabricated 4x2 mesh (no real devices needed:
+    sanitize only reads axis_names + devices.shape)."""
+    from types import SimpleNamespace
+
+    mesh = SimpleNamespace(axis_names=("data", "model"), devices=np.zeros((4, 2)))
+    # 8 % (4*2) == 0: full tuple kept
+    assert partition.sanitize(P(("data", "model")), (8,), mesh) == P(("data", "model"))
+    # 4 % 8 != 0 -> trim to ('data',): 4 % 4 == 0
+    assert partition.sanitize(P(("data", "model")), (4,), mesh)[0] == "data"
+    # 3 divides nothing -> dropped
+    assert partition.sanitize(P(("data", "model")), (3,), mesh) == P(None)
+    # absent axis dropped, 6 % 2 == 0 for model
+    assert partition.sanitize(P(("pod", "model")), (6,), mesh)[0] in (
+        "model", ("model",))
+
+
+def test_tree_shardings_builds():
+    mesh = make_host_mesh()
+    specs = {"w": P(None, "model"), "b": P(None)}
+    shapes = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}
+    sh = partition.tree_shardings(mesh, specs, shapes)
+    assert sh["w"].mesh.axis_names == mesh.axis_names
+
+
+# ---------------------------------------------------------------- ckpt
+
+
+def test_checkpoint_atomic_and_keep_k():
+    tree = {"a": jnp.arange(8, dtype=jnp.float32), "b": {"c": jnp.ones((2, 2))}}
+    with tempfile.TemporaryDirectory() as td:
+        for step in (10, 20, 30, 40):
+            ckpt.save(td, step, tree, keep=2)
+            assert not any(x.endswith(".tmp") for x in os.listdir(td))
+        assert ckpt.all_steps(td) == [30, 40]
+        restored, manifest = ckpt.restore(td, tree)
+        assert manifest["step"] == 40
+        np.testing.assert_array_equal(restored["a"], np.arange(8, dtype=np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    tree = {"a": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as td:
+        ckpt.save(td, 1, tree)
+        bad = {"a": jnp.zeros((5,))}
+        with pytest.raises(AssertionError):
+            ckpt.restore(td, bad)
+
+
+def test_checkpoint_elastic_reshard_roundtrip():
+    """Restore returns host arrays; re-placement with a new sharding is
+    the elastic-rescale path (here: 1-device, structure check)."""
+    mesh = make_host_mesh()
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    with tempfile.TemporaryDirectory() as td:
+        ckpt.save(td, 5, tree)
+        restored, _ = ckpt.restore(td, tree)
+        sh = partition.tree_shardings(mesh, {"w": P(None, "model")}, tree)
+        placed = partition.device_put_tree(
+            {"w": jnp.asarray(restored["w"])}, sh
+        )
+        np.testing.assert_array_equal(np.asarray(placed["w"]), np.asarray(tree["w"]))

@@ -1,0 +1,141 @@
+"""End-to-end system behaviour tests: train -> checkpoint -> restore ->
+serve, with the paper's DBB sparsity active throughout."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dbb
+from repro.core.schedule import WDBBSchedule
+from repro.data.pipeline import MarkovLM
+from repro.models import lm
+from repro.serve.engine import Engine, ServeConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def small_cfg(arch="granite_3_8b", **kw):
+    cfg = configs.get_config(arch, smoke=True)
+    return dataclasses.replace(
+        cfg, vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32", **kw
+    )
+
+
+def test_train_learns_with_awdbb():
+    cfg = small_cfg()
+    data = MarkovLM(cfg.vocab, batch=8, seq=32, seed=0)
+    t = Trainer(
+        cfg,
+        OptimizerConfig(lr=1e-2, warmup_steps=5, total_steps=60),
+        TrainerConfig(total_steps=60, log_every=0),
+        data,
+    )
+    hist = t.run(60)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+    assert not np.isnan(hist[-1]["loss"])
+
+
+def test_wdbb_schedule_enforces_bound():
+    cfg = small_cfg()
+    data = MarkovLM(cfg.vocab, batch=8, seq=32, seed=0)
+    sched = WDBBSchedule(target=dbb.DBBConfig(4, 8), begin_step=0,
+                         end_step=20, update_every=5)
+    t = Trainer(
+        cfg,
+        OptimizerConfig(lr=1e-2, warmup_steps=5, total_steps=40),
+        TrainerConfig(total_steps=40, log_every=0, wdbb=sched),
+        data,
+    )
+    t.run(40)
+    for name in ("mlp", "attn"):
+        sub = t.params["layers"][name]
+        w = (sub["up"]["w"] if name == "mlp" else sub["wq"]["w"])[0]
+        assert bool(dbb.satisfies(w.T, dbb.DBBConfig(4, 8))), name
+
+
+def test_checkpoint_restart_bitexact():
+    cfg = small_cfg()
+    with tempfile.TemporaryDirectory() as td:
+        mk = lambda: Trainer(
+            cfg,
+            OptimizerConfig(lr=1e-2, warmup_steps=5, total_steps=40),
+            TrainerConfig(total_steps=40, log_every=0, ckpt_every=10,
+                          ckpt_dir=td),
+            MarkovLM(cfg.vocab, batch=8, seq=32, seed=0),
+        )
+        t1 = mk()
+        t1.run(20)  # checkpoints at 10, 20
+        t1.run(5)  # steps 21-25 (no checkpoint at 25)
+        ref_after = jax.device_get(t1.params)
+
+        t2 = mk()  # restores at 20 (latest)
+        assert t2.step == 20
+        t2.run(5)
+        got = jax.device_get(t2.params)
+        for a, b in zip(jax.tree_util.tree_leaves(ref_after),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_serve_engine_generates():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(max_seq=48))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 8)).astype(np.int32)
+    out = eng.generate(prompts, 8)
+    assert out.shape == (2, 16)
+    assert (out[:, :8] == prompts).all()
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+def test_serve_packed_matches_dense_when_weights_compliant():
+    """With DBB-compliant weights, packed (wire-format) serving must equal
+    dense serving exactly — the compressed path is lossless on compliant
+    tensors (paper §3.1)."""
+    from repro.core.schedule import prune_weights
+
+    cfg = small_cfg(sparsity=dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True).sparsity,
+        mode="wdbb"))
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    pred = lambda path, w: not any(
+        s in "/".join(str(getattr(k, "key", k)) for k in path)
+        for s in ("embed", "norm", "ln"))
+    params = prune_weights(params, dbb.DBBConfig(4, 8), predicate=pred)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 6)).astype(np.int32)
+    out_dense = Engine(params, cfg, ServeConfig(max_seq=32, pack_weights=False)).generate(prompts, 6)
+    out_packed = Engine(params, cfg, ServeConfig(max_seq=32, pack_weights=True)).generate(prompts, 6)
+    np.testing.assert_array_equal(out_dense, out_packed)
+
+
+def test_grad_compression_error_feedback():
+    from repro.train import compression
+
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32))}
+    r = compression.init_residuals(g)
+    # accumulate EF over several rounds: mean reconstruction error shrinks
+    total_true = jnp.zeros_like(g["w"])
+    total_sent = jnp.zeros_like(g["w"])
+    for i in range(8):
+        q, r = compression.compress_tree(g, r)
+        deq = compression.decompress_tree(q)
+        total_true += g["w"]
+        total_sent += deq["w"]
+    # with error feedback, cumulative transmitted ~= cumulative true
+    rel = float(jnp.linalg.norm(total_sent - total_true) / jnp.linalg.norm(total_true))
+    assert rel < 0.01, rel
+
+
+def test_straggler_detector():
+    from repro.runtime.monitor import StragglerDetector
+
+    det = StragglerDetector(n_hosts=4, window=5, threshold=1.5)
+    for _ in range(5):
+        for h in range(4):
+            det.report(h, 1.0 if h != 2 else 2.5)
+    assert det.stragglers() == [2]
