@@ -1,13 +1,20 @@
 """Benchmark harness — one function per S2TA paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (derived = headline metric of the
-table), followed by the full row dumps for inspection.
+table), followed by the full row dumps for inspection, and always writes
+the kernel microbenchmark rows to ``BENCH_kernels.json`` so the perf
+trajectory is machine-trackable across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]
+
+``--smoke`` runs only the kernel microbenchmarks at reduced sizes/reps
+(CI-friendly); ``--fast`` shortens the accuracy-table training runs.
 """
 
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import time
 
@@ -20,36 +27,54 @@ def _timed(fn, *a, **kw):
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from benchmarks import perf_tables, table3_accuracy
-
-    jobs = [
-        ("fig1_energy_breakdown", perf_tables.fig1_energy_breakdown, {}),
-        ("fig3_smt_overhead", perf_tables.fig3_smt_overhead, {}),
-        ("fig9_sparsity_sweep", perf_tables.fig9_sparsity_sweep, {}),
-        ("fig10_breakdown", perf_tables.fig10_breakdown, {}),
-        ("fig11_models", perf_tables.fig11_models, {}),
-        ("fig12_perlayer", perf_tables.fig12_perlayer, {}),
-        ("table1_buffers", perf_tables.table1_buffers, {}),
-        ("table2_breakdown", perf_tables.table2_breakdown, {}),
-        ("table4_models", perf_tables.table4_models, {}),
-        (
-            "table3_accuracy",
-            table3_accuracy.run,
-            {"steps_base": 150 if fast else 400, "steps_ft": 80 if fast else 200},
-        ),
-    ]
-    # kernel microbenchmarks (wall time of the DBB ops on this host)
+    smoke = "--smoke" in sys.argv
     from benchmarks import kernel_bench
 
-    jobs.append(("kernel_dbb_matmul", kernel_bench.bench_dbb_matmul, {}))
-    jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {}))
+    jobs = []
+    if not smoke:
+        from benchmarks import perf_tables, table3_accuracy
+
+        jobs += [
+            ("fig1_energy_breakdown", perf_tables.fig1_energy_breakdown, {}),
+            ("fig3_smt_overhead", perf_tables.fig3_smt_overhead, {}),
+            ("fig9_sparsity_sweep", perf_tables.fig9_sparsity_sweep, {}),
+            ("fig10_breakdown", perf_tables.fig10_breakdown, {}),
+            ("fig11_models", perf_tables.fig11_models, {}),
+            ("fig12_perlayer", perf_tables.fig12_perlayer, {}),
+            ("table1_buffers", perf_tables.table1_buffers, {}),
+            ("table2_breakdown", perf_tables.table2_breakdown, {}),
+            ("table4_models", perf_tables.table4_models, {}),
+            (
+                "table3_accuracy",
+                table3_accuracy.run,
+                {"steps_base": 150 if fast else 400, "steps_ft": 80 if fast else 200},
+            ),
+        ]
+    # kernel microbenchmarks (wall time of the DBB ops on this host)
+    jobs.append(("kernel_dbb_matmul", kernel_bench.bench_dbb_matmul, {"smoke": smoke}))
+    jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {"smoke": smoke}))
 
     print("name,us_per_call,derived")
     details = []
+    kernel_rows = {}
     for name, fn, kw in jobs:
         rows, derived, us = _timed(fn, **kw)
         print(f"{name},{us:.0f},{derived}")
         details.append((name, rows))
+        if name.startswith("kernel_"):
+            kernel_rows[name] = {"rows": rows, "derived": derived, "us_total": us}
+
+    # machine-readable kernel perf record, tracked across PRs
+    record = {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "smoke": smoke,
+        "benchmarks": kernel_rows,
+    }
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(record, f, indent=2)
+    print("\nwrote BENCH_kernels.json")
 
     print("\n=== details ===")
     for name, rows in details:

@@ -1,0 +1,176 @@
+"""Tile-size selection for the Pallas DBB kernels: heuristic table + cache.
+
+Replaces the old per-call ``_pick`` divisor walk with three layers, checked
+in order:
+
+1. **Benchmark cache** — exact ``(kind, M, K, N, NNZ, BZ)`` hits from a
+   previous :func:`autotune` sweep (in-process dict, optionally persisted
+   to JSON via ``REPRO_AUTOTUNE_CACHE=<path>``).
+2. **Heuristic table** — MXU-aligned defaults keyed on problem size class
+   (the shapes the serving/benchmarks hot paths actually see).
+3. **Divisor fallback** — the largest aligned divisor, so any shape still
+   gets a legal tiling.
+
+``autotune()`` runs a real timing sweep (only when ``REPRO_AUTOTUNE=1`` or
+called explicitly, e.g. from ``benchmarks/kernel_bench.py``) and records
+the winner, so the table improves from measured data rather than folklore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+Tiles = Tuple[int, int, int]  # (tm, tk, tn)
+
+# (kind, m, k, n, nnz, bz) -> (tm, tk, tn)
+_CACHE: Dict[Tuple, Tiles] = {}
+_CACHE_LOADED = False
+
+
+def _cache_path() -> Optional[str]:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE") or None
+
+
+def _load_cache() -> None:
+    global _CACHE_LOADED
+    if _CACHE_LOADED:
+        return
+    _CACHE_LOADED = True
+    path = _cache_path()
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            for k, v in raw.items():
+                _CACHE[tuple(json.loads(k))] = tuple(v)
+        except (OSError, ValueError):
+            pass  # a corrupt cache must never break the kernels
+
+
+def _save_cache() -> None:
+    path = _cache_path()
+    if not path:
+        return
+    try:
+        with open(path, "w") as f:
+            json.dump({json.dumps(list(k)): list(v) for k, v in _CACHE.items()}, f)
+    except OSError:
+        pass
+
+
+def largest_divisor(t: int, n: int, step: int = 1) -> int:
+    """Largest multiple of ``step`` that divides ``n`` and is <= ``t``."""
+    c = min(t, n)
+    c -= c % step
+    while c > step and n % c != 0:
+        c -= step
+    return max(c, min(step, n))
+
+
+def heuristic_tiles(m: int, k: int, n: int, bz: int) -> Tiles:
+    """MXU-aligned default tiling for an ``[M,K] x [K,N]`` DBB matmul.
+
+    Targets: TM/TN multiples of 128 where the shape allows (MXU systolic
+    dims), TK a multiple of BZ holding whole blocks, and a combined VMEM
+    working set (x-tile + expanded w-tile + acc) small enough to
+    double-buffer (~<4 MiB at f32).
+    """
+    # Prefer big N tiles (lane dim) while K is large enough to amortize.
+    tn = largest_divisor(256 if n >= 256 and k <= 2048 else 128, n, 1)
+    if tn < 128:
+        tn = largest_divisor(128, n, 1)
+    tm = largest_divisor(128, m, 1) if m >= 128 else largest_divisor(m, m, 1)
+    tm = max(tm, largest_divisor(8, m, 1))
+    # K tile: whole blocks, bounded so x+w tiles fit comfortably in VMEM.
+    tk = largest_divisor(512 if k >= 512 else k, k, bz)
+    return tm, tk, tn
+
+
+def get_tiles(
+    m: int,
+    k: int,
+    n: int,
+    nnz: int,
+    bz: int,
+    kind: str = "w",
+) -> Tiles:
+    """Resolve the tiling: benchmark cache first, then heuristic."""
+    _load_cache()
+    hit = _CACHE.get((kind, m, k, n, nnz, bz))
+    if hit is not None:
+        return hit
+    return heuristic_tiles(m, k, n, bz)
+
+
+def candidate_tiles(m: int, k: int, n: int, bz: int) -> Iterable[Tiles]:
+    """Legal (divisor-aligned) candidate tilings for an autotune sweep."""
+    tms = sorted({largest_divisor(t, m, 1) for t in (8, 32, 128, 256, m)})
+    tks = sorted({largest_divisor(t, k, bz) for t in (bz * 8, 256, 512, 1024, k)})
+    tns = sorted({largest_divisor(t, n, 1) for t in (128, 256, 512, n)})
+    seen = set()
+    for tm in tms:
+        for tk in tks:
+            if tk % bz:
+                continue
+            for tn in tns:
+                # skip tilings whose working set clearly blows VMEM (~16MB)
+                vmem_f32 = (tm * tk + tk * tn + tm * tn) * 4
+                if vmem_f32 > 8 * 1024 * 1024:
+                    continue
+                c = (tm, tk, tn)
+                if c not in seen:
+                    seen.add(c)
+                    yield c
+
+
+def autotune(
+    run: Callable[[Tiles], Callable[[], object]],
+    m: int,
+    k: int,
+    n: int,
+    nnz: int,
+    bz: int,
+    kind: str = "w",
+    reps: int = 3,
+) -> Tiles:
+    """Time every candidate tiling and cache the winner.
+
+    ``run(tiles)`` returns a nullary callable executing the kernel with
+    that tiling (already closed over the operands); it is invoked once for
+    warmup/compile and ``reps`` times for timing.  Falls back to the
+    heuristic for candidates that fail to compile.
+    """
+    import jax
+
+    _load_cache()
+    key = (kind, m, k, n, nnz, bz)
+    if key in _CACHE:
+        return _CACHE[key]
+    best, best_t = None, float("inf")
+    for tiles in candidate_tiles(m, k, n, bz):
+        try:
+            fn = run(tiles)
+            jax.block_until_ready(fn())  # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn())
+            dt = (time.perf_counter() - t0) / reps
+        except Exception:  # illegal tiling for this backend: skip
+            continue
+        if dt < best_t:
+            best, best_t = tiles, dt
+    if best is None:
+        # every candidate failed (e.g. no TPU on this host): fall back to
+        # the heuristic WITHOUT caching it, so a later sweep on capable
+        # hardware isn't blocked by a folklore entry under this key
+        return heuristic_tiles(m, k, n, bz)
+    _CACHE[key] = best
+    _save_cache()
+    return best
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "0") == "1"

@@ -64,15 +64,10 @@ def dap_prune_pallas(
     m, k = x.shape
     assert k % bz == 0, (k, bz)
 
-    def pick(t, n, step):
-        c = min(t, n)
-        c -= c % step
-        while c > step and n % c != 0:
-            c -= step
-        return max(c, step)
+    from repro.kernels import autotune
 
-    tm = pick(tm, m, 1) if m < 8 else pick(tm, m, 1)
-    tk = pick(tk, k, bz)
+    tm = autotune.largest_divisor(tm, m, 1)
+    tk = autotune.largest_divisor(tk, k, bz)
     grid = (m // tm, k // tk)
     return pl.pallas_call(
         functools.partial(_dap_kernel, nnz=nnz, bz=bz),

@@ -8,25 +8,36 @@ DBB form (``NNZ/BZ`` of the dense bytes + 1-byte bitmask per block-column)
 and are expanded once per (K-tile × N-tile), amortized across the whole
 M-tile — the software analogue of intra-TPE operand reuse.
 
+Rank decode is fully vectorized (one ``cumsum`` for the ranks + one one-hot
+contraction over the NNZ slots): ``dense[b] = bit_b ? values[rank(b)] : 0``
+with ``rank(b) = popcount(mask & (2^b - 1))``, computed for every block
+position at once.  No ``O(BZ*NNZ)`` chained-select cascade — the decode
+cost matches the paper's "very low overhead" claim (§6.1).  The one-hot
+contraction is the Mosaic-friendly form of the DP4M8 mux: a data-independent
+select tree rather than a dynamic gather.
+
 Wire format (see ``repro.core.dbb.pack_bitmask``):
     w_vals [K//BZ, NNZ, N]  — j-th set bit's value, ascending positions
     w_mask [K//BZ, N] uint8 — bit b set ⇔ block position b is a non-zero
 
 Grid ``(M//TM, N//TN, K//TK)`` with K innermost (arbitrary semantics);
-float32 accumulator scratch in VMEM.  Tile defaults are MXU-aligned
-(TM, TN multiples of 128 where shapes allow; TK a multiple of BZ).
+float32 accumulator scratch in VMEM.  Tile sizes come from
+``repro.kernels.autotune`` (benchmark cache → MXU-aligned heuristic) unless
+passed explicitly.  The optional epilogue (bias add + activation) drains
+the accumulator through ``repro.kernels.epilogue`` at the final K step, so
+``y = act(x @ expand(w) + b)`` never materializes the pre-activation tensor.
 
 The kernels are validated in ``interpret=True`` mode against the pure-jnp
 oracles in ``ref.py`` (this container is CPU-only; TPU is the target).
-Mosaic layout note: the expansion assembles the dense tile by stacking BZ
-row-slabs and collapsing ``[KB, BZ, TN] -> [KB*BZ, TN]`` — a second-minor
-reshape with the 128-lane dim unchanged, which Mosaic supports for
-(8,128)-aligned tiles.
+Mosaic layout note: the expansion assembles the dense tile by collapsing
+``[KB, BZ, TN] -> [KB*BZ, TN]`` — a second-minor reshape with the 128-lane
+dim unchanged, which Mosaic supports for (8,128)-aligned tiles.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,48 +45,65 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dbb
+from repro.kernels import autotune, epilogue
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _expand_w_tile(wv, wm, cfg: dbb.DBBConfig):
     """Expand packed weights [TKB, NNZ, TN] + mask [TKB, TN] -> [TKB*BZ, TN].
 
-    Rank decode: position b holds values[rank(b)] iff bit b is set, where
-    rank(b) = popcount(mask & (2^b - 1)).  The rank is accumulated across
-    the static python loop over b (BZ is a compile-time constant).
+    Vectorized rank decode: position ``b`` holds ``values[rank(b)]`` iff bit
+    ``b`` is set, where ``rank(b) = popcount(mask & (2^b - 1))`` — computed
+    for all BZ positions at once as an exclusive cumsum over the unpacked
+    bits, then resolved with a single one-hot contraction over the NNZ
+    slots (exactly one term is non-zero per position, so the sum is exact
+    in any float dtype).
     """
-    mask = wm.astype(jnp.int32)
-    rank = jnp.zeros_like(mask)
-    rows = []
-    zero = jnp.zeros(mask.shape, wv.dtype)
-    for b in range(cfg.bz):
-        bit = (mask >> b) & 1
-        val = zero
-        for j in range(cfg.nnz):
-            val = jnp.where(rank == j, wv[:, j, :], val)
-        rows.append(jnp.where(bit == 1, val, zero))
-        rank = rank + bit
-    dense = jnp.stack(rows, axis=1)  # [TKB, BZ, TN]
-    return dense.reshape(dense.shape[0] * cfg.bz, dense.shape[2])
+    tkb, nnz, tn = wv.shape
+    mask = wm.astype(jnp.int32)  # [TKB, TN]
+    bitpos = jax.lax.broadcasted_iota(jnp.int32, (1, cfg.bz, 1), 1)
+    bits = (mask[:, None, :] >> bitpos) & 1  # [TKB, BZ, TN]
+    rank = jnp.cumsum(bits, axis=1) - bits  # popcount of lower bits
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nnz, 1), 2)
+    onehot = (rank[:, :, None, :] == slot) & (bits[:, :, None, :] == 1)
+    dense = jnp.sum(
+        wv[:, None, :, :] * onehot.astype(wv.dtype), axis=2
+    )  # [TKB, BZ, TN]
+    return dense.reshape(tkb * cfg.bz, tn)
 
 
 def _expand_a_tile(xv, xm, cfg: dbb.DBBConfig):
-    """Expand packed activations [TM, TKB, NNZ] + mask [TM, TKB] -> [TM, TKB*BZ]."""
-    mask = xm.astype(jnp.int32)
-    rank = jnp.zeros_like(mask)
-    cols = []
-    zero = jnp.zeros(mask.shape, xv.dtype)
-    for b in range(cfg.bz):
-        bit = (mask >> b) & 1
-        val = zero
-        for j in range(cfg.nnz):
-            val = jnp.where(rank == j, xv[:, :, j], val)
-        cols.append(jnp.where(bit == 1, val, zero))
-        rank = rank + bit
-    dense = jnp.stack(cols, axis=2)  # [TM, TKB, BZ]
-    return dense.reshape(dense.shape[0], dense.shape[1] * cfg.bz)
+    """Expand packed activations [TM, TKB, NNZ] + mask [TM, TKB] -> [TM, TKB*BZ].
+
+    Same vectorized cumsum/one-hot rank decode as :func:`_expand_w_tile`,
+    with the block axis on the minor dim (activation wire layout).
+    """
+    tm, tkb, nnz = xv.shape
+    mask = xm.astype(jnp.int32)  # [TM, TKB]
+    bitpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, cfg.bz), 2)
+    bits = (mask[:, :, None] >> bitpos) & 1  # [TM, TKB, BZ]
+    rank = jnp.cumsum(bits, axis=2) - bits
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, nnz), 3)
+    onehot = (rank[:, :, :, None] == slot) & (bits[:, :, :, None] == 1)
+    dense = jnp.sum(
+        xv[:, :, None, :] * onehot.astype(xv.dtype), axis=3
+    )  # [TM, TKB, BZ]
+    return dense.reshape(tm, tkb * cfg.bz)
 
 
-def _dbb_matmul_kernel(x_ref, wv_ref, wm_ref, o_ref, acc_ref, *, cfg, nk):
+def _flush_epilogue(acc_ref, o_ref, b_ref, act):
+    """Drain the f32 accumulator through the (optional) fused epilogue."""
+    y = acc_ref[...]
+    y = epilogue.apply_epilogue(y, b_ref[...] if b_ref is not None else None, act)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _dbb_matmul_kernel(x_ref, wv_ref, wm_ref, *rest, cfg, nk, act, has_bias):
+    b_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -87,12 +115,15 @@ def _dbb_matmul_kernel(x_ref, wv_ref, wm_ref, o_ref, acc_ref, *, cfg, nk):
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        _flush_epilogue(acc_ref, o_ref, b_ref, act)
 
 
 def _dbb_matmul_aw_kernel(
-    xv_ref, xm_ref, wv_ref, wm_ref, o_ref, acc_ref, *, cfg_a, cfg_w, nk
+    xv_ref, xm_ref, wv_ref, wm_ref, *rest, cfg_a, cfg_w, nk, act, has_bias
 ):
+    b_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -105,20 +136,24 @@ def _dbb_matmul_aw_kernel(
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        _flush_epilogue(acc_ref, o_ref, b_ref, act)
 
 
-def _pick(t, n, lo):
-    """Largest divisor of n that is <= t, but at least lo if possible."""
-    c = min(t, n)
-    while c > 1 and n % c != 0:
-        c -= 1
-    return max(c, 1)
+def _resolve_tiles(m, k, n, cfg, tm, tk, tn, kind):
+    """Explicit tiles win; otherwise consult the autotune table, then make
+    every dim a legal whole-block divisor."""
+    atm, atk, atn = autotune.get_tiles(m, k, n, cfg.nnz, cfg.bz, kind=kind)
+    tm = autotune.largest_divisor(tm or atm, m, 1)
+    tn = autotune.largest_divisor(tn or atn, n, 1)
+    # largest_divisor with step=bz yields a whole-block divisor of k
+    # (k % bz == 0 is asserted by the callers)
+    tk = autotune.largest_divisor(tk or atk, k, cfg.bz)
+    return tm, tk, tn
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "tm", "tk", "tn", "out_dtype", "interpret"),
+    static_argnames=("cfg", "tm", "tk", "tn", "out_dtype", "act", "interpret"),
 )
 def dbb_matmul_pallas(
     x: jax.Array,
@@ -126,48 +161,53 @@ def dbb_matmul_pallas(
     w_mask: jax.Array,
     *,
     cfg: dbb.DBBConfig,
-    tm: int = 128,
-    tk: int = 512,
-    tn: int = 128,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    tm: Optional[int] = None,
+    tk: Optional[int] = None,
+    tn: Optional[int] = None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """``x [M,K] @ expand(w) [K,N] -> [M,N]`` with W-DBB packed weights."""
+    """``act(x [M,K] @ expand(w) [K,N] + bias) -> [M,N]`` with W-DBB weights."""
     m, k = x.shape
     kb, nnz, n = w_vals.shape
     assert kb * cfg.bz == k and nnz == cfg.nnz, (x.shape, w_vals.shape, cfg)
     out_dtype = out_dtype or x.dtype
-    tm = _pick(tm, m, 8)
-    tn = _pick(tn, n, 128)
-    tk = _pick(tk, k, cfg.bz)
-    if tk % cfg.bz:  # tk must hold whole blocks
-        tk = cfg.bz * max(1, tk // cfg.bz)
-        while k % tk:
-            tk -= cfg.bz
+    tm, tk, tn = _resolve_tiles(m, k, n, cfg, tm, tk, tn, "w")
     tkb = tk // cfg.bz
     nk = k // tk
     grid = (m // tm, n // tn, nk)
+    in_specs = [
+        pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tkb, nnz, tn), lambda i, j, kk: (kk, 0, j)),
+        pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x, w_vals, w_mask]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
     return pl.pallas_call(
-        functools.partial(_dbb_matmul_kernel, cfg=cfg, nk=nk),
+        functools.partial(
+            _dbb_matmul_kernel, cfg=cfg, nk=nk, act=act, has_bias=bias is not None
+        ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((tkb, nnz, tn), lambda i, j, kk: (kk, 0, j)),
-            pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w_vals, w_mask)
+    )(*operands)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg_a", "cfg_w", "tm", "tk", "tn", "out_dtype", "interpret"),
+    static_argnames=(
+        "cfg_a", "cfg_w", "tm", "tk", "tn", "out_dtype", "act", "interpret"
+    ),
 )
 def dbb_matmul_aw_pallas(
     x_vals: jax.Array,
@@ -177,44 +217,51 @@ def dbb_matmul_aw_pallas(
     *,
     cfg_a: dbb.DBBConfig,
     cfg_w: dbb.DBBConfig,
-    tm: int = 128,
-    tk: int = 512,
-    tn: int = 128,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    tm: Optional[int] = None,
+    tk: Optional[int] = None,
+    tn: Optional[int] = None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Joint A/W-DBB matmul: both operands stream packed (S2TA-AW analogue)."""
+    """Joint A/W-DBB matmul: both operands stream packed (S2TA-AW analogue),
+    with the same fused bias+activation epilogue as the W-DBB kernel."""
     m, kb_a, nnz_a = x_vals.shape
     kb, nnz_w, n = w_vals.shape
     assert kb_a == kb and nnz_a == cfg_a.nnz and nnz_w == cfg_w.nnz
     k = kb * cfg_w.bz
     out_dtype = out_dtype or x_vals.dtype
-    tm = _pick(tm, m, 8)
-    tn = _pick(tn, n, 128)
-    tk = _pick(tk, k, cfg_w.bz)
-    if tk % cfg_w.bz:
-        tk = cfg_w.bz * max(1, tk // cfg_w.bz)
-        while k % tk:
-            tk -= cfg_w.bz
+    tm, tk, tn = _resolve_tiles(m, k, n, cfg_w, tm, tk, tn, "aw")
     tkb = tk // cfg_w.bz
     nk = k // tk
     grid = (m // tm, n // tn, nk)
+    in_specs = [
+        pl.BlockSpec((tm, tkb, nnz_a), lambda i, j, kk: (i, kk, 0)),
+        pl.BlockSpec((tm, tkb), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tkb, nnz_w, tn), lambda i, j, kk: (kk, 0, j)),
+        pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x_vals, x_mask, w_vals, w_mask]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
     return pl.pallas_call(
         functools.partial(
-            _dbb_matmul_aw_kernel, cfg_a=cfg_a, cfg_w=cfg_w, nk=nk
+            _dbb_matmul_aw_kernel,
+            cfg_a=cfg_a,
+            cfg_w=cfg_w,
+            nk=nk,
+            act=act,
+            has_bias=bias is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tkb, nnz_a), lambda i, j, kk: (i, kk, 0)),
-            pl.BlockSpec((tm, tkb), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((tkb, nnz_w, tn), lambda i, j, kk: (kk, 0, j)),
-            pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x_vals, x_mask, w_vals, w_mask)
+    )(*operands)

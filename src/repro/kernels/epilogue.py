@@ -1,0 +1,54 @@
+"""Fused matmul epilogues shared by the Pallas kernels and the jnp oracles.
+
+S2TA's TPE drains its accumulators through the output pipeline (paper §6),
+which is where bias add and the activation function land for free in
+hardware.  The software analogue: apply both on the float32 accumulator
+*before* the cast back to the storage dtype, inside the same kernel (or
+fused HLO region) as the matmul — no extra HBM round-trip for the
+intermediate.
+
+Both the Pallas kernels (``dbb_matmul.py``) and the oracles (``ref.py``)
+call :func:`apply_epilogue` with the same float32 accumulator semantics, so
+kernel-vs-oracle parity holds with the epilogue enabled.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Supported fused activations.  ``swiglu`` is deliberately absent: it needs
+# two matmul outputs, so the gate matmul fuses ``silu`` and the elementwise
+# product happens outside (see models/common.mlp_forward).
+ACTIVATIONS = (None, "relu", "silu", "gelu")
+
+
+def apply_act(y: jax.Array, act: Optional[str]) -> jax.Array:
+    """Apply a named activation (float32 in, float32 out)."""
+    if act is None:
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "silu":
+        return y * jax.nn.sigmoid(y)
+    if act == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    raise ValueError(f"unknown epilogue activation {act!r}; one of {ACTIVATIONS}")
+
+
+def apply_epilogue(
+    acc_f32: jax.Array,
+    bias: Optional[jax.Array],
+    act: Optional[str],
+) -> jax.Array:
+    """``act(acc + bias)`` on the float32 accumulator.
+
+    ``bias`` broadcasts over leading dims (shape ``[N]`` or ``[1, N]``).
+    The caller casts the result to the output dtype — the epilogue itself
+    stays in float32 so kernel and oracle agree bit-for-bit.
+    """
+    if bias is not None:
+        acc_f32 = acc_f32 + bias.astype(jnp.float32)
+    return apply_act(acc_f32, act)

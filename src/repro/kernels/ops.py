@@ -7,11 +7,17 @@ Every op takes ``impl``:
     the technique shows up in the roofline's memory term.
   * ``"pallas"`` — the TPU kernel (validated via interpret=True on CPU).
   * ``"interpret"`` — the TPU kernel body executed in Python (testing).
+
+All matmul ops accept a fused epilogue (``bias`` add + ``act``), applied on
+the float32 accumulator before the output cast — see ``epilogue.py``.  The
+fused A-DBB entry point is :func:`dap_pack` + :func:`dbb_matmul_aw`: prune
+and pack the activations once, then stream both operands packed into the
+matmul, never materializing the pruned dense intermediate.
 """
 
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,17 +37,23 @@ def dbb_matmul(
     cfg: dbb.DBBConfig,
     *,
     impl: Impl = "jnp",
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
     out_dtype=None,
     **tile_kw,
 ) -> jax.Array:
-    """W-DBB matmul ``[M,K] x packed[K,N] -> [M,N]``."""
+    """W-DBB matmul ``act([M,K] x packed[K,N] + bias) -> [M,N]``."""
     if impl == "jnp":
-        return ref.dbb_matmul_ref(x, w_vals, w_mask, cfg, out_dtype=out_dtype)
+        return ref.dbb_matmul_ref(
+            x, w_vals, w_mask, cfg, out_dtype=out_dtype, bias=bias, act=act
+        )
     return dbb_matmul_pallas(
         x,
         w_vals,
         w_mask,
         cfg=cfg,
+        bias=bias,
+        act=act,
         out_dtype=out_dtype,
         interpret=(impl == "interpret"),
         **tile_kw,
@@ -57,13 +69,16 @@ def dbb_matmul_aw(
     cfg_w: dbb.DBBConfig,
     *,
     impl: Impl = "jnp",
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
     out_dtype=None,
     **tile_kw,
 ) -> jax.Array:
-    """Joint A/W-DBB matmul with both operands packed."""
+    """Joint A/W-DBB matmul with both operands packed (+ fused epilogue)."""
     if impl == "jnp":
         return ref.dbb_matmul_aw_ref(
-            x_vals, x_mask, w_vals, w_mask, cfg_a, cfg_w, out_dtype=out_dtype
+            x_vals, x_mask, w_vals, w_mask, cfg_a, cfg_w,
+            out_dtype=out_dtype, bias=bias, act=act,
         )
     return dbb_matmul_aw_pallas(
         x_vals,
@@ -72,6 +87,8 @@ def dbb_matmul_aw(
         w_mask,
         cfg_a=cfg_a,
         cfg_w=cfg_w,
+        bias=bias,
+        act=act,
         out_dtype=out_dtype,
         interpret=(impl == "interpret"),
         **tile_kw,
@@ -98,6 +115,28 @@ def dap_prune(
         pruned.reshape(shape),
         mask.reshape(*shape[:-1], shape[-1] // bz),
     )
+
+
+def dap_pack(
+    x: jax.Array,
+    nnz: int,
+    bz: int = dbb.DEFAULT_BZ,
+):
+    """Fused DAP-prune + pack: dense ``[..., K]`` -> wire format directly.
+
+    Returns ``(vals [..., K//BZ, NNZ], mask [..., K//BZ] uint8)`` — the
+    Top-NNZ selection and the bitmask packing share one block-topk pass
+    (``dbb.pack_bitmask``), so the pruned *dense* tensor is never
+    materialized.  This is the producer side of the packed activation
+    hand-off consumed by :func:`dbb_matmul_aw`.
+    """
+    return dbb.pack_bitmask(x, dbb.DBBConfig(nnz, bz))
+
+
+def expand_act(vals: jax.Array, mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Array:
+    """Wire-format activations -> dense ``[..., K]`` (fallback hand-off
+    for consumers without a packed-operand kernel)."""
+    return ref.decode_a(vals, mask, cfg)
 
 
 # Re-export the packers so users need only `repro.kernels.ops`.

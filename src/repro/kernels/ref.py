@@ -1,15 +1,66 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These are the ground truth the kernels are validated against (interpret
-mode on CPU, sweeping shapes/dtypes — see tests/test_kernels.py).
+mode on CPU, sweeping shapes/dtypes — see tests/test_kernels.py), and they
+double as the shardable ``impl="jnp"`` hot path used for serving on this
+host, so their own speed matters.
+
+The decode is the same vectorized cumsum rank-decode as the kernels
+(``rank(b) = popcount(mask & (2^b - 1))``), but applied **directly in the
+kernel wire layout** — no ``moveaxis``/transpose round-trips through the
+``[..., K]``-major layout of ``dbb.expand_bitmask`` — and the per-position
+value lookup is a single masked ``take_along_axis`` gather (XLA lowers it
+well on CPU/TPU; the Pallas kernels use the equivalent one-hot contraction
+because Mosaic prefers data-independent selects).
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dbb
+from repro.kernels import epilogue
+
+
+def decode_w(w_vals: jax.Array, w_mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Array:
+    """Wire-format weights -> dense ``[K, N]``, decoded in-layout.
+
+    ``w_vals [K//BZ, NNZ, N]``, ``w_mask [K//BZ, N] uint8``.  One cumsum
+    (exclusive, over the unpacked bits) + one masked gather — no NNZ loop,
+    no transposes.
+    """
+    kb, nnz, n = w_vals.shape
+    mask = w_mask.astype(jnp.int32)  # [KB, N]
+    pos = jnp.arange(cfg.bz, dtype=jnp.int32)
+    bits = (mask[:, None, :] >> pos[None, :, None]) & 1  # [KB, BZ, N]
+    rank = jnp.cumsum(bits, axis=1) - bits  # popcount of lower bits
+    idx = jnp.minimum(rank, nnz - 1)
+    gathered = jnp.take_along_axis(w_vals, idx, axis=1)  # [KB, BZ, N]
+    dense = jnp.where(bits == 1, gathered, jnp.zeros_like(gathered))
+    return dense.reshape(kb * cfg.bz, n)
+
+
+def decode_a(x_vals: jax.Array, x_mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Array:
+    """Wire-format activations ``[..., K//BZ, NNZ]`` -> dense ``[..., K]``.
+
+    Same vectorized rank decode with the block axis minor (activation
+    layout); equivalent to ``dbb.expand_bitmask`` but gather-based.
+    """
+    nnz = x_vals.shape[-1]
+    mask = x_mask.astype(jnp.int32)  # [..., KB]
+    pos = jnp.arange(cfg.bz, dtype=jnp.int32)
+    bits = (mask[..., None] >> pos) & 1  # [..., KB, BZ]
+    rank = jnp.cumsum(bits, axis=-1) - bits
+    idx = jnp.minimum(rank, nnz - 1)
+    # [..., KB, 1, NNZ] gathered at [..., KB, BZ, 1] -> [..., KB, BZ]
+    gathered = jnp.take_along_axis(x_vals[..., None, :], idx[..., None], axis=-1)[
+        ..., 0
+    ]
+    dense = jnp.where(bits == 1, gathered, jnp.zeros_like(gathered))
+    return dense.reshape(*dense.shape[:-2], dense.shape[-2] * cfg.bz)
 
 
 def dbb_matmul_ref(
@@ -18,25 +69,21 @@ def dbb_matmul_ref(
     w_mask: jax.Array,
     cfg: dbb.DBBConfig,
     out_dtype=None,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
 ) -> jax.Array:
-    """W-DBB matmul oracle.
+    """W-DBB matmul oracle with optional fused epilogue.
 
     ``x [M, K]`` dense; weights in kernel wire format (see
     :func:`repro.core.dbb.pack_bitmask`) blocked along the reduction dim:
     ``w_vals [K//BZ, NNZ, N]``, ``w_mask [K//BZ, N] uint8``.
-    Returns ``x @ expand(w) [M, N]``.
+    Returns ``act(x @ expand(w) + bias) [M, N]``.
     """
-    # expand_bitmask expects the block axis structure on the last dim; here
-    # values are [KB, NNZ, N] with the block contents per output column, so
-    # move N forward: [N, KB, NNZ] + mask [N, KB] -> dense [N, K] -> [K, N].
-    vals = jnp.moveaxis(w_vals, -1, 0)  # [N, KB, NNZ]
-    mask = jnp.moveaxis(w_mask, -1, 0)  # [N, KB]
-    w_dense = dbb.expand_bitmask(vals, mask, cfg)  # [N, K]
-    w_dense = w_dense.T  # [K, N]
+    w_dense = decode_w(w_vals, w_mask, cfg)  # [K, N]
     out_dtype = out_dtype or x.dtype
-    return jnp.dot(
-        x, w_dense.astype(x.dtype), preferred_element_type=jnp.float32
-    ).astype(out_dtype)
+    y = jnp.dot(x, w_dense.astype(x.dtype), preferred_element_type=jnp.float32)
+    y = epilogue.apply_epilogue(y, bias, act)
+    return y.astype(out_dtype)
 
 
 def dbb_matmul_aw_ref(
@@ -47,14 +94,18 @@ def dbb_matmul_aw_ref(
     cfg_a: dbb.DBBConfig,
     cfg_w: dbb.DBBConfig,
     out_dtype=None,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
 ) -> jax.Array:
     """Joint A/W-DBB matmul oracle (S2TA-AW analogue).
 
     Activations in wire format ``x_vals [M, K//BZ, NNZ_a]``,
     ``x_mask [M, K//BZ] uint8``; weights as in :func:`dbb_matmul_ref`.
     """
-    x_dense = dbb.expand_bitmask(x_vals, x_mask, cfg_a)  # [M, K]
-    return dbb_matmul_ref(x_dense, w_vals, w_mask, cfg_w, out_dtype=out_dtype)
+    x_dense = decode_a(x_vals, x_mask, cfg_a)  # [M, K]
+    return dbb_matmul_ref(
+        x_dense, w_vals, w_mask, cfg_w, out_dtype=out_dtype, bias=bias, act=act
+    )
 
 
 def dap_prune_ref(x: jax.Array, nnz: int, bz: int = dbb.DEFAULT_BZ):
@@ -78,5 +129,5 @@ def pack_weight_for_kernel(w: jax.Array, cfg: dbb.DBBConfig):
 
 
 def pack_act_for_kernel(x: jax.Array, cfg: dbb.DBBConfig):
-    """Dense ``x [M, K]`` -> ``(x_vals [M, K//BZ, NNZ], x_mask [M, K//BZ])``."""
+    """Dense ``x [..., K]`` -> ``(x_vals [..., K//BZ, NNZ], x_mask [..., K//BZ])``."""
     return dbb.pack_bitmask(x, cfg)

@@ -189,7 +189,7 @@ def flash_decode(q, cache_layer, new_k, new_v, decode_pos, window_mask, ctx):
         out = out.reshape(bl, 1, h, -1).astype(q_l.dtype)
         return out, k_c, v_c, pos_c
 
-    fn = jax.shard_map(
+    fn = common.shard_map_compat(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -251,9 +251,12 @@ def gqa_forward(
     b, s, d = x.shape
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim()
     sp, li = cfg.sparsity, layer_idx
-    q = linear(p["wq"], x, sparsity=sp, layer_idx=li).reshape(b, s, h, dh)
-    k = linear(p["wk"], x, sparsity=sp, layer_idx=li).reshape(b, s, kvh, dh)
-    v = linear(p["wv"], x, sparsity=sp, layer_idx=li).reshape(b, s, kvh, dh)
+    # One DAP+pack shared by all three projections (packed serving); the
+    # dense/training path passes x through unchanged.
+    xin = common.maybe_pack_input(x, (p["wq"], p["wk"], p["wv"]), sp, li)
+    q = linear(p["wq"], xin, sparsity=sp, layer_idx=li).reshape(b, s, h, dh)
+    k = linear(p["wk"], xin, sparsity=sp, layer_idx=li).reshape(b, s, kvh, dh)
+    v = linear(p["wv"], xin, sparsity=sp, layer_idx=li).reshape(b, s, kvh, dh)
     if rope_cs is None:
         cos, sin = rope.rope_cos_sin(positions, dh, cfg.rope_theta)
     else:
@@ -352,13 +355,15 @@ def mla_forward(
     qk_rope, qk_nope, dv = m.qk_rope_head_dim, m.qk_nope_head_dim, m.v_head_dim
     scale = 1.0 / math.sqrt(qk_nope + qk_rope)
 
-    cq = rmsnorm(linear(p["q_down"], x, sparsity=sp, layer_idx=li), p["q_norm"])
+    # Both down-projections read the residual stream: share one DAP+pack.
+    xin = common.maybe_pack_input(x, (p["q_down"], p["kv_down"]), sp, li)
+    cq = rmsnorm(linear(p["q_down"], xin, sparsity=sp, layer_idx=li), p["q_norm"])
     q = linear(p["q_up"], cq, sparsity=sp, layer_idx=li).reshape(b, s, h, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     cos, sin = rope.rope_cos_sin(positions, qk_rope, cfg.rope_theta)
     q_rope = rope.apply_rope(q_rope, cos, sin)
 
-    kv = linear(p["kv_down"], x, sparsity=sp, layer_idx=li)
+    kv = linear(p["kv_down"], xin, sparsity=sp, layer_idx=li)
     c_kv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"])
     k_rope = kv[..., m.kv_lora_rank :][:, :, None, :]  # 1 shared head
     k_rope = rope.apply_rope(k_rope, cos, sin)[:, :, 0, :]
@@ -437,9 +442,10 @@ def cross_attn_forward(p, x, enc_kv, cfg, *, layer_idx=None):
     t = enc_kv.shape[1]
     h, dh = cfg.n_heads, cfg.head_dim()
     sp, li = cfg.sparsity, layer_idx
+    kvin = common.maybe_pack_input(enc_kv, (p["wk"], p["wv"]), sp, li)
     q = linear(p["wq"], x, sparsity=sp, layer_idx=li).reshape(b, s, h, dh)
-    k = linear(p["wk"], enc_kv, sparsity=sp, layer_idx=li).reshape(b, t, h, dh)
-    v = linear(p["wv"], enc_kv, sparsity=sp, layer_idx=li).reshape(b, t, h, dh)
+    k = linear(p["wk"], kvin, sparsity=sp, layer_idx=li).reshape(b, t, h, dh)
+    v = linear(p["wv"], kvin, sparsity=sp, layer_idx=li).reshape(b, t, h, dh)
     qp = jnp.zeros((b, s), jnp.int32)
     kp = jnp.zeros((b, t), jnp.int32)
     out = mha(q, k, v, qp, kp, window=None, chunk=None)

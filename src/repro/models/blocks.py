@@ -103,8 +103,11 @@ def decoder_block(
             p["moe"], h2, cfg, layer_idx=layer_idx, n_groups=cfg.moe_groups
         )
     else:
+        # mlp_forward packs h2 once (fused dap_prune->pack) and shares the
+        # packed hand-off across gate/up/down under packed serving
         m_out = mlp_forward(
-            p["mlp"], h2, act=cfg.mlp_act, sparsity=cfg.sparsity, layer_idx=layer_idx
+            p["mlp"], h2, act=cfg.mlp_act, sparsity=cfg.sparsity,
+            layer_idx=layer_idx,
         )
     return x + m_out, new_cache, aux
 

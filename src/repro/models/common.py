@@ -13,8 +13,9 @@ divide the dim evenly) so a single definition serves every mesh.
 
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import dbb
 from repro.core.dap import apply_dap
 from repro.core.sparsity import SparsityConfig
-from repro.kernels import ops
+from repro.kernels import epilogue, ops
 
 # Logical mesh axis names (see launch/mesh.py).
 POD, DATA, MODEL = "pod", "data", "model"
@@ -32,6 +33,22 @@ BATCH_AXES = (POD, DATA)  # batch shards over both
 
 def dtype_of(name: str):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-compat shard_map: jax.shard_map (new) or
+    jax.experimental.shard_map.shard_map (<=0.4.x, kwarg ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
 
 
 # --------------------------------------------------------------------- init
@@ -73,6 +90,76 @@ def make_norm(d: int, *, dtype=jnp.float32, bias: bool = False):
     return params, specs
 
 
+# ---------------------------------------------------- packed activation flow
+
+
+@dataclasses.dataclass
+class PackedAct:
+    """A-DBB activation in kernel wire format — the packed hand-off.
+
+    Produced once per consumer group by :func:`maybe_pack_input` (the fused
+    ``dap_prune -> pack`` step) and consumed by :func:`linear`'s joint
+    A/W-DBB matmul, so DAP'd activations flow between layers *packed*:
+    the pruned dense intermediate is never materialized, and sibling
+    linears sharing one input (e.g. Q/K/V, gate/up) share one DAP+pack.
+
+    Not a jax pytree on purpose: it lives strictly inside a single traced
+    forward pass and never crosses a jit boundary.
+    """
+
+    vals: jax.Array  # [..., K//BZ, NNZ]
+    mask: jax.Array  # [..., K//BZ] uint8
+    cfg: dbb.DBBConfig
+    k: int  # dense extent of the packed axis
+    dtype: jnp.dtype  # dense dtype (outputs keep it)
+
+
+ActOrPacked = Union[jax.Array, PackedAct]
+
+
+def _active_dap_spec(sp: Optional[SparsityConfig], x, layer_idx, first_layer):
+    """The DAP spec :func:`linear` would apply to ``x``, or None."""
+    if sp is None or sp.mode != "awdbb":
+        return None
+    if first_layer and sp.exclude_first_layer:
+        return None
+    spec = sp.a_spec(layer_idx)
+    if spec is None or x.shape[-1] % spec.bz != 0:
+        return None
+    return spec
+
+
+def mlp_input_targets(p, act: str) -> tuple:
+    """The MLP param dicts that consume the block's residual input."""
+    return (p["gate"], p["up"]) if act == "swiglu" else (p["up"],)
+
+
+def maybe_pack_input(
+    x: ActOrPacked,
+    targets: Sequence[dict],
+    sparsity: Optional[SparsityConfig] = None,
+    layer_idx: Optional[int] = None,
+    first_layer: bool = False,
+) -> ActOrPacked:
+    """DAP-prune + pack ``x`` once for a group of packed-weight linears.
+
+    Returns a :class:`PackedAct` when the fused A/W-DBB path applies (A-DBB
+    active for this layer and **every** target linear holds wire-format
+    weights — i.e. packed serving); otherwise returns ``x`` unchanged and
+    each linear falls back to its own dense-path DAP (training keeps the
+    straight-through gradient of ``core.dap``).
+    """
+    if isinstance(x, PackedAct) or not targets:
+        return x
+    if not all(isinstance(t, dict) and "w_vals" in t for t in targets):
+        return x
+    spec = _active_dap_spec(sparsity, x, layer_idx, first_layer)
+    if spec is None:
+        return x
+    vals, mask = ops.dap_pack(x, spec.nnz, spec.bz)
+    return PackedAct(vals, mask, spec.cfg, x.shape[-1], x.dtype)
+
+
 # ------------------------------------------------------------------ forward
 
 
@@ -95,14 +182,15 @@ def layernorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
 
 def linear(
     p,
-    x: jax.Array,
+    x: ActOrPacked,
     *,
     sparsity: Optional[SparsityConfig] = None,
     layer_idx: Optional[int] = None,
     dap_input: bool = True,
     first_layer: bool = False,
+    act: Optional[str] = None,
 ) -> jax.Array:
-    """DBB-aware linear: ``x @ w (+ b)``.
+    """DBB-aware linear: ``act(x @ w (+ b))``.
 
     * ``dense`` / ``wdbb`` training: plain matmul (W-DBB is enforced by the
       trainer's mask, so ``w`` already satisfies the block bound).
@@ -110,17 +198,40 @@ def linear(
       input activations first — paper §5.1/§8.1.
     * serve-packed: ``p`` holds ``w_vals``/``w_mask`` wire-format weights
       (values + bitmask); the matmul streams compressed weights
-      (`repro.kernels.ops.dbb_matmul`) — the memory-roofline attack.
+      (`repro.kernels.ops.dbb_matmul`) with bias+act fused into the
+      accumulator epilogue — the memory-roofline attack.
+    * packed input: ``x`` may be a :class:`PackedAct` (the fused
+      ``dap_prune -> pack`` hand-off); with wire-format weights this runs
+      the joint A/W-DBB matmul — both operands stream packed.
     """
     sp = sparsity
-    if sp is not None and sp.mode == "awdbb" and dap_input and not (
-        first_layer and sp.exclude_first_layer
-    ):
-        spec = sp.a_spec(layer_idx)
-        if spec is not None and x.shape[-1] % spec.bz == 0:
+    if isinstance(x, PackedAct):
+        if "w_vals" in p:  # joint A/W-DBB: both operands packed
+            cfg_w = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
+            lead = x.vals.shape[:-2]
+            y2 = ops.dbb_matmul_aw(
+                x.vals.reshape((-1,) + x.vals.shape[-2:]),
+                x.mask.reshape((-1,) + x.mask.shape[-1:]),
+                p["w_vals"],
+                p["w_mask"],
+                x.cfg,
+                cfg_w,
+                impl="jnp",
+                bias=p.get("b"),
+                act=act,
+                out_dtype=x.dtype,
+            )
+            return y2.reshape(lead + y2.shape[-1:])
+        # Dense weights can't consume the wire format: expand (exact) and
+        # continue on the dense path.  DAP is NOT re-applied — packing
+        # already pruned.
+        x = ops.expand_act(x.vals, x.mask, x.cfg)
+    elif dap_input:
+        spec = _active_dap_spec(sp, x, layer_idx, first_layer)
+        if spec is not None:
             x = apply_dap(x, spec)
 
-    if "w_vals" in p:  # packed serving weights
+    if "w_vals" in p:  # packed serving weights, dense activations
         cfg = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
         lead = x.shape[:-1]
         y2 = ops.dbb_matmul(
@@ -129,14 +240,17 @@ def linear(
             p["w_mask"],
             cfg,
             impl="jnp",
+            bias=p.get("b"),
+            act=act,
             out_dtype=x.dtype,
         )
-        y = y2.reshape(*lead, y2.shape[-1])
-    else:
-        y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+        return y2.reshape(*lead, y2.shape[-1])
+    y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
-    return y
+    # apply_act is dtype-preserving, so the dense path keeps model-dtype
+    # numerics (identical to the pre-fusion silu/gelu call sites)
+    return epilogue.apply_act(y, act)
 
 
 def pack_linear_params(p, sp: SparsityConfig):
@@ -162,16 +276,25 @@ def silu(x):
     return x * jax.nn.sigmoid(x)
 
 
-def mlp_forward(p, x, *, act: str, sparsity=None, layer_idx=None):
-    """Gated (swiglu) or plain (gelu) MLP with DBB hooks on both matmuls."""
+def mlp_forward(p, x: ActOrPacked, *, act: str, sparsity=None, layer_idx=None):
+    """Gated (swiglu) or plain (gelu) MLP with DBB hooks on both matmuls.
+
+    The input is DAP-packed **once** and shared by gate+up (callers may
+    pass an already-packed ``x`` — see blocks.py), the activation fuses
+    into the matmul epilogue, and the hidden tensor is re-packed for the
+    down projection — on the packed serving path no pruned dense
+    intermediate ever hits memory between the two matmuls.
+    """
     kw = dict(sparsity=sparsity, layer_idx=layer_idx)
+    xin = maybe_pack_input(x, mlp_input_targets(p, act), sparsity, layer_idx)
     if act == "swiglu":
-        g = linear(p["gate"], x, **kw)
-        u = linear(p["up"], x, **kw)
-        h = silu(g) * u
+        g = linear(p["gate"], xin, act="silu", **kw)
+        u = linear(p["up"], xin, **kw)
+        h = g * u
     else:
-        h = jax.nn.gelu(linear(p["up"], x, **kw), approximate=True)
-    return linear(p["down"], h, **kw)
+        h = linear(p["up"], xin, act="gelu", **kw)
+    hin = maybe_pack_input(h, (p["down"],), sparsity, layer_idx)
+    return linear(p["down"], hin, **kw)
 
 
 def make_mlp(key, d: int, f: int, *, act: str, dtype=jnp.bfloat16):

@@ -283,17 +283,20 @@ def prefill(params, tokens, cfg, cache=None):
             new_cache = dict(cache_layer)
             return carry + y, new_cache
         y, _, _ = blocks.decoder_block(layer_p, carry, cfg, positions, rope_cs=rope_cs)
-        # recompute k/v for the cache fill
+        # recompute k/v for the cache fill — through the same DBB-aware
+        # linear path as decode (DAP + packed weights), so the cache is
+        # bit-identical to what per-token stepping would have written
         h = rmsnorm(carry, layer_p["ln1"], cfg.norm_eps)
         window = cache_layer["k"].shape[1]
         kvh, dh = cfg.n_kv_heads, cfg.head_dim()
+        sp = cfg.sparsity
         if cfg.mla is None:
-            k = linear(layer_p["attn"]["wk"], h).reshape(b, s, kvh, dh)
-            v = linear(layer_p["attn"]["wv"], h).reshape(b, s, kvh * dh)
+            k = linear(layer_p["attn"]["wk"], h, sparsity=sp).reshape(b, s, kvh, dh)
+            v = linear(layer_p["attn"]["wv"], h, sparsity=sp).reshape(b, s, kvh * dh)
             k = rope.apply_rope(k, *rope_cs).reshape(b, s, kvh * dh)
         else:
             m = cfg.mla
-            kv = linear(layer_p["attn"]["kv_down"], h)
+            kv = linear(layer_p["attn"]["kv_down"], h, sparsity=sp)
             c_kv = rmsnorm(kv[..., : m.kv_lora_rank], layer_p["attn"]["kv_norm"])
             kr = kv[..., m.kv_lora_rank :][:, :, None, :]
             cs2 = rope.rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)

@@ -1,6 +1,17 @@
 """Batched serving engine: prefill + greedy/temperature decode over the
 model zoo, with DBB-packed serving weights as an option (the paper's
 technique applied to inference bandwidth).
+
+Prefill is **batched**: the whole prompt goes through one jitted
+chunked-prefill call (``lm.prefill`` — attention is query-chunked
+internally, and the KV cache is filled in the same trace), so a prompt of
+``S0`` tokens costs O(1) Python→XLA dispatches instead of the seed's
+``S0`` sequential decode steps.  Sampling (vocab slice + argmax) is jitted
+too, so the decode loop does exactly one dispatch per generated token.
+
+SSM and hybrid families keep the stepped prefill: their recurrent state
+has no exact one-shot cache fill in ``lm.prefill`` (the chunked scan
+drops the final state), and serving correctness beats speed there.
 """
 
 from __future__ import annotations
@@ -15,12 +26,16 @@ import numpy as np
 from repro.core import dbb
 from repro.models import common, encdec, lm
 
+# Families whose cache lm.prefill fills exactly (pure attention caches).
+BATCHED_PREFILL_FAMILIES = ("dense", "moe", "vlm")
+
 
 @dataclasses.dataclass
 class ServeConfig:
     max_seq: int = 512
     temperature: float = 0.0  # 0 = greedy
     pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
+    prefill_mode: str = "auto"  # auto | batched | stepped
 
 
 def pack_params_for_serving(params, cfg):
@@ -57,6 +72,55 @@ class Engine:
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
         )
+        self._prefill = jax.jit(
+            lambda p, toks, cache: lm.prefill(p, toks, cfg, cache=cache)
+        )
+        v = cfg.vocab  # slice off vocab padding before argmax
+        self._sample = jax.jit(
+            lambda logits: jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+        )
+        # dispatch instrumentation (see tests/test_serve.py): python-level
+        # calls into the jitted prefill/decode functions
+        self.prefill_calls = 0
+        self.decode_calls = 0
+
+    def _resolve_prefill_mode(self) -> str:
+        mode = self.scfg.prefill_mode
+        if mode == "auto":
+            return (
+                "batched"
+                if self.cfg.family in BATCHED_PREFILL_FAMILIES
+                else "stepped"
+            )
+        if mode not in ("batched", "stepped"):
+            raise ValueError(
+                f"unknown prefill_mode {mode!r}; one of auto|batched|stepped"
+            )
+        if mode == "batched" and self.cfg.family not in BATCHED_PREFILL_FAMILIES:
+            raise ValueError(
+                f"prefill_mode='batched' unsupported for family "
+                f"{self.cfg.family!r}: lm.prefill cannot fill recurrent "
+                f"state exactly (use 'auto' or 'stepped')"
+            )
+        return mode
+
+    def _prefill_batched(self, toks, cache):
+        """Whole-prompt prefill: one jitted call fills the cache and
+        returns the logits of every prompt position."""
+        self.prefill_calls += 1
+        logits, cache = self._prefill(self.params, toks, cache)
+        return logits, cache
+
+    def _prefill_stepped(self, toks, cache):
+        """Per-token prefill (exact for SSM/hybrid recurrent state)."""
+        s0 = toks.shape[1]
+        logits = None
+        for t in range(s0):
+            self.prefill_calls += 1
+            logits, cache = self._decode(
+                self.params, cache, toks[:, t : t + 1], jnp.int32(t)
+            )
+        return logits, cache
 
     def generate(self, prompts: np.ndarray, n_tokens: int):
         """prompts [B, S0] int32 -> tokens [B, S0 + n_tokens]."""
@@ -64,19 +128,17 @@ class Engine:
         b, s0 = prompts.shape
         cache = lm.make_cache(cfg, b, self.scfg.max_seq)
         toks = jnp.asarray(prompts)
-        # prefill by stepping (exact for every family incl. SSM/hybrid)
-        logits = None
-        for t in range(s0):
-            logits, cache = self._decode(
-                self.params, cache, toks[:, t : t + 1], jnp.int32(t)
-            )
+        if self._resolve_prefill_mode() == "batched":
+            logits, cache = self._prefill_batched(toks, cache)
+        else:
+            logits, cache = self._prefill_stepped(toks, cache)
         out = [toks]
-        v = cfg.vocab  # slice off vocab padding before argmax
-        cur = jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+        cur = self._sample(logits)
         for i in range(n_tokens):
             out.append(cur)
+            self.decode_calls += 1
             logits, cache = self._decode(
                 self.params, cache, cur, jnp.int32(s0 + i)
             )
-            cur = jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+            cur = self._sample(logits)
         return np.asarray(jnp.concatenate(out, axis=1))

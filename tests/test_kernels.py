@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypo import given, settings, st  # hypothesis-or-skip shim
 
 from repro.core import dbb
 from repro.kernels import ops, ref
@@ -34,9 +35,13 @@ TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
         (64, 128, 128, 32, 64, 128),
         (16, 256, 384, 16, 128, 128),
         (128, 64, 128, 64, 64, 128),
+        # odd shapes: non-power-of-two M, K a single/odd block count
+        (24, 40, 128, 24, 40, 128),
+        (5, 8, 128, 5, 8, 128),
+        (12, 24, 256, 4, 8, 128),
     ],
 )
-@pytest.mark.parametrize("nnz", [2, 4, 8])
+@pytest.mark.parametrize("nnz", [1, 2, 4, 8])
 def test_dbb_matmul_kernel_vs_ref(dtype, m, k, n, tm, tk, tn, nnz):
     cfg = dbb.DBBConfig(nnz, 8)
     x = rnd((m, k), dtype, 1)
@@ -51,8 +56,8 @@ def test_dbb_matmul_kernel_vs_ref(dtype, m, k, n, tm, tk, tn, nnz):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("m,k,n", [(16, 64, 128), (32, 128, 256)])
-@pytest.mark.parametrize("nnz_a,nnz_w", [(2, 4), (4, 4), (5, 2)])
+@pytest.mark.parametrize("m,k,n", [(16, 64, 128), (32, 128, 256), (24, 40, 128)])
+@pytest.mark.parametrize("nnz_a,nnz_w", [(1, 1), (2, 4), (4, 4), (5, 2), (8, 8)])
 def test_dbb_matmul_aw_kernel_vs_ref(dtype, m, k, n, nnz_a, nnz_w):
     cfg_a, cfg_w = dbb.DBBConfig(nnz_a, 8), dbb.DBBConfig(nnz_w, 8)
     x = rnd((m, k), dtype, 3)
@@ -79,6 +84,101 @@ def test_dap_kernel_vs_ref(dtype, m, k, nnz):
         np.array(p_k, np.float32), np.array(p_ref, np.float32)
     )
     np.testing.assert_array_equal(np.array(m_k), np.array(m_ref))
+
+
+# ------------------------------------------------------------ fused epilogue
+
+
+@pytest.mark.parametrize("act", [None, "relu", "silu", "gelu"])
+@pytest.mark.parametrize("nnz", [1, 2, 4, 8])
+def test_dbb_matmul_epilogue_kernel_vs_ref(act, nnz):
+    """Fused bias+activation epilogue: kernel (interpret) vs oracle, and
+    oracle-fused vs unfused-then-applied reference."""
+    from repro.kernels import epilogue
+
+    cfg = dbb.DBBConfig(nnz, 8)
+    m, k, n = 16, 64, 128
+    x = rnd((m, k), jnp.float32, 11)
+    w = rnd((k, n), jnp.float32, 12)
+    b = rnd((n,), jnp.float32, 13)
+    wv, wm = ops.pack_weight(w, cfg)
+    y_ref = ref.dbb_matmul_ref(x, wv, wm, cfg, out_dtype=jnp.float32, bias=b, act=act)
+    y_k = ops.dbb_matmul(
+        x, wv, wm, cfg, impl="interpret", bias=b, act=act,
+        tm=16, tk=64, tn=128, out_dtype=jnp.float32,
+    )
+    np.testing.assert_allclose(np.array(y_k), np.array(y_ref), atol=1e-5, rtol=1e-5)
+    # fused == unfused + post-applied epilogue
+    y_unfused = ref.dbb_matmul_ref(x, wv, wm, cfg, out_dtype=jnp.float32)
+    y_post = epilogue.apply_epilogue(y_unfused, b, act)
+    np.testing.assert_allclose(np.array(y_ref), np.array(y_post), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("act", [None, "silu"])
+@pytest.mark.parametrize("nnz_a,nnz_w", [(2, 4), (4, 4), (8, 8)])
+def test_dbb_matmul_aw_epilogue_kernel_vs_ref(act, nnz_a, nnz_w):
+    cfg_a, cfg_w = dbb.DBBConfig(nnz_a, 8), dbb.DBBConfig(nnz_w, 8)
+    m, k, n = 16, 64, 128
+    x = rnd((m, k), jnp.float32, 14)
+    w = rnd((k, n), jnp.float32, 15)
+    b = rnd((n,), jnp.float32, 16)
+    xv, xm = ops.pack_act(x, cfg_a)
+    wv, wm = ops.pack_weight(w, cfg_w)
+    y_ref = ref.dbb_matmul_aw_ref(
+        xv, xm, wv, wm, cfg_a, cfg_w, out_dtype=jnp.float32, bias=b, act=act
+    )
+    y_k = ops.dbb_matmul_aw(
+        xv, xm, wv, wm, cfg_a, cfg_w, impl="interpret", bias=b, act=act,
+        tm=16, tk=64, tn=128, out_dtype=jnp.float32,
+    )
+    np.testing.assert_allclose(np.array(y_k), np.array(y_ref), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------- packed hand-off
+
+
+@pytest.mark.parametrize("nnz_a", [1, 2, 4])
+def test_packed_handoff_matches_dap_then_wdbb(nnz_a):
+    """fused dap_pack -> dbb_matmul_aw == apply_dap -> dbb_matmul: the
+    packed activation hand-off is lossless vs the dense round-trip."""
+    from repro.core.dap import DAPSpec, apply_dap
+
+    cfg_w = dbb.DBBConfig(4, 8)
+    cfg_a = dbb.DBBConfig(nnz_a, 8)
+    m, k, n = 24, 64, 128
+    x = rnd((m, k), jnp.float32, 21)
+    w = rnd((k, n), jnp.float32, 22)
+    wv, wm = ops.pack_weight(w, cfg_w)
+    x_dense = apply_dap(x, DAPSpec(nnz_a, 8))
+    y_dense = ops.dbb_matmul(x_dense, wv, wm, cfg_w, impl="jnp")
+    xv, xm = ops.dap_pack(x, nnz_a, 8)
+    y_packed = ops.dbb_matmul_aw(xv, xm, wv, wm, cfg_a, cfg_w, impl="jnp")
+    np.testing.assert_allclose(np.array(y_packed), np.array(y_dense), atol=1e-6)
+    # the packed operand expands back to exactly the DAP'd tensor
+    np.testing.assert_array_equal(
+        np.array(ops.expand_act(xv, xm, cfg_a)), np.array(x_dense)
+    )
+
+
+def test_decode_w_matches_expand_bitmask():
+    """In-layout decode == the proven dbb.expand_bitmask (transposed)."""
+    cfg = dbb.DBBConfig(3, 8)
+    w = rnd((48, 128), jnp.float32, 23)  # [K, N]
+    wv, wm = ops.pack_weight(w, cfg)
+    got = ref.decode_w(wv, wm, cfg)
+    vals = jnp.moveaxis(wv, -1, 0)
+    mask = jnp.moveaxis(wm, -1, 0)
+    want = dbb.expand_bitmask(vals, mask, cfg).T
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_decode_a_matches_expand_bitmask():
+    cfg = dbb.DBBConfig(5, 8)
+    x = rnd((3, 7, 40), jnp.float32, 24)  # leading batch dims
+    xv, xm = ops.pack_act(x, cfg)
+    got = ref.decode_a(xv, xm, cfg)
+    want = dbb.expand_bitmask(xv, xm, cfg)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
 
 
 # ---------------------------------------------------------------- properties

@@ -2,7 +2,8 @@
 hypothesis property tests on the model's invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypo import given, settings, st  # hypothesis-or-skip shim
 
 from repro.perfmodel import s2ta
 from repro.perfmodel.workloads import MODELS, typical_conv
