@@ -1,0 +1,186 @@
+"""Bench regression check: diff two ``BENCH_kernels.json`` records.
+
+Compares every tracked row (a dict with ``impl`` and ``us``) of the fresh
+record against the baseline and **fails (exit 1) when any row slows down
+by more than the threshold** (default 25%).  Absolute µs rows gate only
+when both records come from the same host — cross-machine wall times are
+reported as notes instead (a slower CI runner must not wedge merges, a
+faster one must not mask regressions).  Rows present on only one side
+are reported but never fail — new benchmarks must be landable, and
+retired ones must not wedge CI.
+
+The deterministic byte-ratio metrics are checked the other way and much
+tighter: they are exact functions of the wire format, so any drop beyond
+rounding (``RATIO_TOL``, 1%) fails — a PR cannot silently regress the
+compression the kernels exist to deliver.
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE.json FRESH.json \
+        [--threshold 0.25]
+
+CI copies the checked-in ``BENCH_kernels.json`` aside before re-running
+the smoke bench, then diffs the fresh record against it (see
+``.github/workflows/ci.yml``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# derived metrics where LOWER is a regression (higher is better).
+# deliberately only the *deterministic* byte ratios: timing-derived
+# ratios (e.g. decode_rewrite_speedup) divide two noisy measurements and
+# would flake CI — the absolute µs rows already guard those paths.
+TRACKED_RATIOS = (
+    "weight_bytes_ratio",
+    "int8_weight_bytes_ratio",
+    "int8_vs_bf16_weight_bytes_ratio",
+)
+# byte ratios are exact functions of the wire format (no timing noise):
+# any drop beyond rounding is a real compression regression, so they get
+# a near-zero tolerance instead of the timing-noise threshold
+RATIO_TOL = 0.01
+
+
+def _rows(record, bench):
+    return record.get("benchmarks", {}).get(bench, {}).get("rows", [])
+
+
+def _impl_times(rows):
+    return {
+        r["impl"]: r["us"]
+        for r in rows
+        if isinstance(r, dict) and "impl" in r and "us" in r
+    }
+
+
+def _ratio_values(rows):
+    out = {}
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        for key in TRACKED_RATIOS:
+            if key in r:
+                out[key] = r[key]
+    return out
+
+
+def _machine_id(record: dict) -> tuple:
+    """Identity used for the same-machine check.  Best-effort: hostname
+    alone is not enough (containers/gVisor report generic names like
+    'runsc' on any hardware), so the platform string and cpu count join
+    it — but two identical container images on different metal still
+    collide, so treat ``auto`` as a heuristic and use ``--gate-times
+    never`` (or ``always``) when the operator knows better."""
+    return (
+        record.get("host"), record.get("platform"), record.get("cpus")
+    )
+
+
+def compare(baseline: dict, fresh: dict, threshold: float, gate_times="auto"):
+    """Returns (failures, notes) — lists of human-readable strings."""
+    failures, notes = [], []
+    # absolute µs rows only gate on the SAME machine — cross-machine
+    # wall times would fail (or mask) regressions independent of the
+    # code.  The deterministic byte ratios gate everywhere.
+    if gate_times == "auto":
+        gate_times = _machine_id(baseline) == _machine_id(fresh)
+    else:
+        gate_times = gate_times == "always"
+    if not gate_times:
+        notes.append(
+            f"machine changed ({_machine_id(baseline)} -> "
+            f"{_machine_id(fresh)}): µs rows reported but not gated; "
+            "byte ratios still gate"
+        )
+    benches = set(baseline.get("benchmarks", {})) | set(fresh.get("benchmarks", {}))
+    for bench in sorted(benches):
+        old_rows, new_rows = _rows(baseline, bench), _rows(fresh, bench)
+        if not old_rows:
+            notes.append(f"{bench}: new benchmark (no baseline) — skipped")
+            continue
+        if not new_rows:
+            notes.append(f"{bench}: missing from fresh record — skipped")
+            continue
+        old_t, new_t = _impl_times(old_rows), _impl_times(new_rows)
+        for impl in sorted(set(old_t) | set(new_t)):
+            if impl not in old_t:
+                notes.append(f"{bench}/{impl}: new row ({new_t[impl]} µs)")
+                continue
+            if impl not in new_t:
+                notes.append(f"{bench}/{impl}: row retired")
+                continue
+            slowdown = new_t[impl] / old_t[impl] - 1.0
+            line = (
+                f"{bench}/{impl}: {old_t[impl]} -> {new_t[impl]} µs "
+                f"({slowdown:+.1%})"
+            )
+            if gate_times and slowdown > threshold:
+                failures.append(line + f"  [> +{threshold:.0%} budget]")
+            else:
+                notes.append(line)
+        old_r, new_r = _ratio_values(old_rows), _ratio_values(new_rows)
+        for key in sorted(set(old_r) - set(new_r)):
+            # a deterministic compression metric vanishing IS a failure —
+            # otherwise the gate itself could be deleted silently
+            # (retiring one legitimately means updating TRACKED_RATIOS)
+            failures.append(
+                f"{bench}/{key}: tracked ratio missing from fresh record"
+            )
+        for key in sorted(set(new_r) - set(old_r)):
+            notes.append(f"{bench}/{key}: new tracked ratio ({new_r[key]})")
+        for key in sorted(set(old_r) & set(new_r)):
+            if old_r[key] <= 0:
+                continue
+            drop = 1.0 - new_r[key] / old_r[key]
+            line = f"{bench}/{key}: {old_r[key]} -> {new_r[key]} ({-drop:+.1%})"
+            if drop > RATIO_TOL:
+                failures.append(line + f"  [ratio dropped > {RATIO_TOL:.0%}]")
+            else:
+                notes.append(line)
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="previous BENCH_kernels.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_kernels.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max tolerated relative slowdown of a µs row (default 0.25; "
+        "byte ratios always use the fixed RATIO_TOL of 1%%)",
+    )
+    ap.add_argument(
+        "--gate-times",
+        choices=("auto", "always", "never"),
+        default="auto",
+        help="gate the µs rows: auto = only when host+platform match "
+        "(default), always / never = operator override",
+    )
+    args = ap.parse_args(argv)
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        # no baseline (first run / artifact lost): nothing to regress from
+        print(f"compare: no usable baseline ({e}); passing")
+        return 0
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures, notes = compare(baseline, fresh, args.threshold, args.gate_times)
+    for line in notes:
+        print(f"  ok   {line}")
+    for line in failures:
+        print(f"  FAIL {line}")
+    if failures:
+        print(f"\n{len(failures)} row(s) regressed beyond the budget")
+        return 1
+    print("\nno regressions beyond the budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

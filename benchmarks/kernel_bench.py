@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import dbb
 from repro.kernels import autotune, ops
-from repro.kernels.dbb_matmul import dbb_matmul_pallas
+from repro.kernels.dbb_matmul import dbb_matmul_int8_pallas, dbb_matmul_pallas
 
 
 def maybe_autotune(x, wv, wm, cfg):
@@ -33,6 +33,25 @@ def maybe_autotune(x, wv, wm, cfg):
         )
 
     return autotune.autotune(run, m, k, n, cfg.nnz, cfg.bz, kind="w")
+
+
+def maybe_autotune_int8(x, wv8, wm8, ws8, cfg):
+    """Companion sweep for the int8 kernel — populates the ``w_int8``
+    cache kind (its wider-K candidates are a different optimum than the
+    f32 kind's, so the keys never alias)."""
+    if not autotune.autotune_enabled():
+        return None
+    xq, xs = ops.quantize_act(x)
+    m, k = x.shape
+    n = wv8.shape[-1]
+
+    def run(tiles):
+        tm, tk, tn = tiles
+        return lambda: dbb_matmul_int8_pallas(
+            xq, xs, wv8, wm8, ws8, cfg=cfg, tm=tm, tk=tk, tn=tn
+        )
+
+    return autotune.autotune(run, m, k, n, cfg.nnz, cfg.bz, kind="w_int8")
 
 
 def _time(f, *args, n=5, passes=3):
@@ -85,27 +104,55 @@ def bench_dbb_matmul(smoke: bool = False):
             *ops.dap_pack(a, 4, 8), v, mk, cfg, cfg, impl="jnp"
         )
     )
+    # INT8 wire format (the paper's datapath): int8 values + bitmask +
+    # scales, int32 accumulate, dequant fused in the epilogue
+    wv8, wm8, ws8 = ops.pack_weight_int8(w, cfg)
+    f_int8 = jax.jit(
+        lambda a, v, mk, sc: ops.dbb_matmul_int8(a, v, mk, sc, cfg, impl="jnp")
+    )
+    f_int8_fused = jax.jit(
+        lambda a, v, mk, sc, bb: ops.dbb_matmul_int8(
+            a, v, mk, sc, cfg, impl="jnp", bias=bb, act="silu"
+        )
+    )
     tuned = maybe_autotune(x, wv, wm, cfg)
+    tuned_i8 = maybe_autotune_int8(x, wv8, wm8, ws8, cfg)
     us_dense = _time(f_dense, x, w, n=reps)
     us_dbb = _time(f_dbb, x, wv, wm, n=reps)
     us_seed = _time(f_seed, x, wv, wm, n=reps)
     us_fused = _time(f_fused, x, wv, wm, b, n=reps)
     us_aw = _time(f_aw, x, wv, wm, n=reps)
+    us_int8 = _time(f_int8, x, wv8, wm8, ws8, n=reps)
+    us_int8_fused = _time(f_int8_fused, x, wv8, wm8, ws8, b, n=reps)
     dense_bytes = w.size * 4
+    dense_bf16_bytes = w.size * 2
     packed_bytes = wv.size * 4 + wm.size
+    int8_packed_bytes = wv8.size * 1 + wm8.size + ws8.size * 4
     rows = [
         {"impl": "dense", "us": round(us_dense, 1)},
         {"impl": "dbb_jnp", "us": round(us_dbb, 1)},
         {"impl": "dbb_jnp_seed_decode", "us": round(us_seed, 1)},
         {"impl": "dbb_jnp_fused_bias_silu", "us": round(us_fused, 1)},
         {"impl": "dbb_jnp_aw_packed_handoff", "us": round(us_aw, 1)},
+        {"impl": "dbb_jnp_int8", "us": round(us_int8, 1)},
+        {"impl": "dbb_int8_fused_epilogue", "us": round(us_int8_fused, 1)},
         {"decode_rewrite_speedup": round(us_seed / us_dbb, 2)},
+        # bytes ratios vs the dense weights this bench actually allocates
+        # (f32 on this host); int8_vs_bf16 is the serving-dtype view
         {"weight_bytes_ratio": round(dense_bytes / packed_bytes, 3)},
+        {"int8_weight_bytes_ratio": round(dense_bytes / int8_packed_bytes, 3)},
+        {
+            "int8_vs_bf16_weight_bytes_ratio": round(
+                dense_bf16_bytes / int8_packed_bytes, 3
+            )
+        },
         {"shape": [m, k, n], "cfg": str(cfg)},
     ]
     if tuned is not None:
         rows.append({"autotuned_tiles": list(tuned)})
-    return rows, round(dense_bytes / packed_bytes, 3)
+    if tuned_i8 is not None:
+        rows.append({"autotuned_tiles_int8": list(tuned_i8)})
+    return rows, round(dense_bytes / int8_packed_bytes, 3)
 
 
 def bench_dap_prune(smoke: bool = False):
@@ -121,7 +168,7 @@ def bench_dap_prune(smoke: bool = False):
     pruned, mask = f(x)
     density = float(jnp.mean((pruned != 0).astype(jnp.float32)))
     rows = [
-        {"us": round(us, 1), "post_density": round(density, 3)},
+        {"impl": "dap_prune", "us": round(us, 1), "post_density": round(density, 3)},
         {"impl": "dap_pack_fused", "us": round(us_pack, 1)},
     ]
     return rows, round(density, 3)

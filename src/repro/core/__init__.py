@@ -3,6 +3,7 @@
 Public API:
     DBBConfig, prune, pack, unpack, topk_block_mask, block_density, satisfies
     DAPSpec, dap, apply_dap
+    quantize, dequantize, symmetric_scale (shared int8 quant math)
     WDBBSchedule, prune_weights, wdbb_masks, apply_masks
     SparsityConfig, DENSE, WDBB_4_8, AWDBB_4_8
 """
@@ -21,6 +22,7 @@ from repro.core.dbb import (  # noqa: F401
     unpack,
 )
 from repro.core.dap import DAPSpec, apply_dap, dap  # noqa: F401
+from repro.core.quant import dequantize, quantize, symmetric_scale  # noqa: F401
 from repro.core.schedule import (  # noqa: F401
     WDBBSchedule,
     apply_masks,

@@ -236,6 +236,42 @@ def expand_bitmask(values: jax.Array, bitmask: jax.Array, cfg: DBBConfig) -> jax
     return _from_blocks(dense_b)
 
 
+def pack_bitmask_int8(x: jax.Array, cfg: DBBConfig, scale_axis=None):
+    """Dense -> (int8 values, bitmask, f32 scale) — the INT8 wire format.
+
+    Same rank-order layout as :func:`pack_bitmask`, but the kept values
+    are symmetrically quantized (``repro.core.quant``) so the wire
+    carries 1 byte per value + 1 mask byte per block — the paper's
+    actual INT8 datapath (§6: 8-bit operands, 32-bit accumulators).
+
+    ``scale_axis`` names the *packed-layout* axes the scale is shared
+    over (``None`` = per-tensor, the dynamic-activation mode).  Weights
+    use per-output-channel scales: pack ``w.T`` so the channel is a
+    leading axis, then share the scale over the block/slot axes — see
+    ``repro.kernels.ref.pack_weight_int8``.
+
+    The bitmask marks the *pre-quantization* non-zeros; a kept value may
+    round to wire 0, which dequantizes to exact 0 — decode stays exact.
+    """
+    from repro.core import quant  # local: dbb must not hard-depend on quant
+
+    vals, bitmask = pack_bitmask(x, cfg)
+    q, scale = quant.quantize(vals, axis=scale_axis)
+    return q, bitmask, scale
+
+
+def expand_bitmask_int8(
+    values: jax.Array, bitmask: jax.Array, scale: jax.Array, cfg: DBBConfig,
+    scale_axis=None, dtype=jnp.float32,
+) -> jax.Array:
+    """(int8 values, bitmask, scale) -> dense; inverse of
+    :func:`pack_bitmask_int8` up to the quantization grid."""
+    from repro.core import quant
+
+    deq = quant.dequantize(values, scale, axis=scale_axis)
+    return expand_bitmask(deq, bitmask, cfg).astype(dtype)
+
+
 def block_density(x: jax.Array, bz: int = DEFAULT_BZ) -> jax.Array:
     """Histogram-ready per-block NNZ counts, shape ``[..., K//BZ]``."""
     xb = _to_blocks(x, bz)

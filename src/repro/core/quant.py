@@ -1,0 +1,67 @@
+"""Symmetric INT8 quantization — the one quant math shared by the stack.
+
+S2TA's datapath is INT8 end to end (paper §6: 8-bit operands into the
+DP4M8 MACs, 32-bit accumulators).  Two users share these helpers:
+
+* the **kernel wire format** (``kernels/ref.pack_weight_int8`` /
+  ``ops.dap_pack_int8``): per-output-channel scales for weights, a
+  per-tensor dynamic scale for activations, int32 accumulation in the
+  matmul, dequant fused into the epilogue;
+* **gradient compression** (``train/compression.py``): per-tensor scale
+  on the data-parallel all-reduce payload.
+
+The scheme is symmetric (no zero-point): ``q = clip(round(x/s), ±127)``
+with ``s = amax/127``, so zero is exactly representable — essential for
+DBB, where the wire format's unused value slots must decode to exact
+zeros after dequantization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0  # symmetric int8 grid: [-127, 127] (-128 unused)
+
+Axis = Union[None, int, Sequence[int]]
+
+
+def symmetric_scale(x: jax.Array, axis: Axis = None) -> jax.Array:
+    """Scale ``s = amax/127`` reducing over ``axis`` (None = whole tensor).
+
+    Zero slices get scale 1.0 so ``x/s`` is well-defined (and quantizes
+    to exact 0).  Always float32.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    return jnp.where(amax > 0, amax / QMAX, 1.0)
+
+
+def quantize(x: jax.Array, axis: Axis = None):
+    """``x -> (int8 q, f32 scale)`` — symmetric, round-to-nearest.
+
+    ``axis`` names the axes the scale is *shared over* (reduced for the
+    amax): ``None`` is per-tensor (scalar scale, the dynamic-activation
+    and gradient-compression mode); e.g. ``axis=0`` on a ``[K, N]``
+    weight gives one scale per output channel ``[N]``.
+    """
+    scale = symmetric_scale(x, axis)
+    s_b = scale if axis is None else jnp.expand_dims(scale, _norm_axes(axis, x.ndim))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s_b), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(
+    q: jax.Array, scale: jax.Array, axis: Axis = None, dtype=jnp.float32
+) -> jax.Array:
+    """Inverse of :func:`quantize`: ``q * scale`` with the scale
+    re-broadcast over the same ``axis`` layout."""
+    s_b = scale if axis is None else jnp.expand_dims(scale, _norm_axes(axis, q.ndim))
+    return (q.astype(jnp.float32) * s_b).astype(dtype)
+
+
+def _norm_axes(axis: Axis, ndim: int):
+    if isinstance(axis, int):
+        axis = (axis,)
+    return tuple(a % ndim for a in axis)

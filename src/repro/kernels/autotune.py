@@ -70,13 +70,15 @@ def largest_divisor(t: int, n: int, step: int = 1) -> int:
     return max(c, min(step, n))
 
 
-def heuristic_tiles(m: int, k: int, n: int, bz: int) -> Tiles:
+def heuristic_tiles(m: int, k: int, n: int, bz: int, int8: bool = False) -> Tiles:
     """MXU-aligned default tiling for an ``[M,K] x [K,N]`` DBB matmul.
 
     Targets: TM/TN multiples of 128 where the shape allows (MXU systolic
     dims), TK a multiple of BZ holding whole blocks, and a combined VMEM
     working set (x-tile + expanded w-tile + acc) small enough to
-    double-buffer (~<4 MiB at f32).
+    double-buffer (~<4 MiB at f32).  INT8 wire tiles carry 1-byte values
+    (and the expanded tile is int8, not f32), so the same VMEM budget
+    affords a 2× wider K tile — more accumulation per flush.
     """
     # Prefer big N tiles (lane dim) while K is large enough to amortize.
     tn = largest_divisor(256 if n >= 256 and k <= 2048 else 128, n, 1)
@@ -85,7 +87,8 @@ def heuristic_tiles(m: int, k: int, n: int, bz: int) -> Tiles:
     tm = largest_divisor(128, m, 1) if m >= 128 else largest_divisor(m, m, 1)
     tm = max(tm, largest_divisor(8, m, 1))
     # K tile: whole blocks, bounded so x+w tiles fit comfortably in VMEM.
-    tk = largest_divisor(512 if k >= 512 else k, k, bz)
+    tk_cap = 1024 if int8 else 512
+    tk = largest_divisor(tk_cap if k >= tk_cap else k, k, bz)
     return tm, tk, tn
 
 
@@ -97,12 +100,16 @@ def get_tiles(
     bz: int,
     kind: str = "w",
 ) -> Tiles:
-    """Resolve the tiling: benchmark cache first, then heuristic."""
+    """Resolve the tiling: benchmark cache first, then heuristic.
+
+    ``kind`` ∈ {``w``, ``aw``, ``w_int8``, ``aw_int8``} — int8 wire
+    formats get their own cache keys and a wider-K heuristic.
+    """
     _load_cache()
     hit = _CACHE.get((kind, m, k, n, nnz, bz))
     if hit is not None:
         return hit
-    return heuristic_tiles(m, k, n, bz)
+    return heuristic_tiles(m, k, n, bz, int8=kind.endswith("int8"))
 
 
 def candidate_tiles(m: int, k: int, n: int, bz: int) -> Iterable[Tiles]:
@@ -166,7 +173,7 @@ def autotune(
         # every candidate failed (e.g. no TPU on this host): fall back to
         # the heuristic WITHOUT caching it, so a later sweep on capable
         # hardware isn't blocked by a folklore entry under this key
-        return heuristic_tiles(m, k, n, bz)
+        return heuristic_tiles(m, k, n, bz, int8=kind.endswith("int8"))
     _CACHE[key] = best
     _save_cache()
     return best

@@ -45,7 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dbb
-from repro.kernels import autotune, epilogue
+from repro.kernels import autotune, epilogue, ref
 
 # jax renamed TPUCompilerParams -> CompilerParams across versions.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
@@ -196,6 +196,200 @@ def dbb_matmul_pallas(
         out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+# ------------------------------------------------------------- INT8 kernels
+#
+# The paper's actual operating point: int8 operands into the MACs, int32
+# accumulators (§6, DP4M8).  On TPU that is the MXU's native int8 mode —
+# the packed wire carries int8 values (1/4 the bf16-pipeline's value
+# bytes at the same NNZ/BZ), the rank-decode expansion stays in int8,
+# the dot accumulates in an int32 VMEM scratch, and the final K-step
+# flush dequantizes (x_scale × w_scale per output channel) fused with
+# bias + activation via ``epilogue.apply_dequant_epilogue`` — one pass
+# from accumulator to output dtype, exactly like the TPE output pipeline.
+#
+# Integer accumulation is associative, so the tiled kernel matches the
+# quantized jnp oracle (``ref.dbb_matmul_int8_ref``) *bit-for-bit*.
+
+
+def _flush_dequant_epilogue(acc_ref, o_ref, s_ref, b_ref, act):
+    """Drain the int32 accumulator through the fused dequant epilogue."""
+    y = epilogue.apply_dequant_epilogue(
+        acc_ref[...], s_ref[...], b_ref[...] if b_ref is not None else None, act
+    )
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _dbb_matmul_int8_kernel(x_ref, wv_ref, wm_ref, s_ref, *rest, cfg, nk, act, has_bias):
+    b_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # rank-decode in int8 (the one-hot sum promotes to int32; exactly one
+    # term per position is non-zero, so the cast back to int8 is exact)
+    w_dense = _expand_w_tile(wv_ref[...], wm_ref[...], cfg).astype(jnp.int8)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_dense, preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        _flush_dequant_epilogue(acc_ref, o_ref, s_ref, b_ref, act)
+
+
+def _dbb_matmul_aw_int8_kernel(
+    xv_ref, xm_ref, wv_ref, wm_ref, s_ref, *rest, cfg_a, cfg_w, nk, act, has_bias
+):
+    b_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_dense = _expand_a_tile(xv_ref[...], xm_ref[...], cfg_a).astype(jnp.int8)
+    w_dense = _expand_w_tile(wv_ref[...], wm_ref[...], cfg_w).astype(jnp.int8)
+    acc_ref[...] += jnp.dot(x_dense, w_dense, preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        _flush_dequant_epilogue(acc_ref, o_ref, s_ref, b_ref, act)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "tm", "tk", "tn", "out_dtype", "act", "interpret"),
+)
+def dbb_matmul_int8_pallas(
+    x_q: jax.Array,
+    x_scale: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    *,
+    cfg: dbb.DBBConfig,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    tm: Optional[int] = None,
+    tk: Optional[int] = None,
+    tn: Optional[int] = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """INT8 W-DBB matmul: ``act(scale · (x_q @ expand(w_q)) + bias)``.
+
+    ``x_q [M,K] int8`` (per-tensor ``x_scale``), weights in int8 wire
+    format with per-channel ``w_scale [N]``.  int32 accumulation; the
+    dequant scale row is folded outside the kernel and streamed like the
+    bias, so the kernel needs no scalar operands.
+    """
+    m, k = x_q.shape
+    kb, nnz, n = w_vals.shape
+    assert x_q.dtype == jnp.int8 and w_vals.dtype == jnp.int8
+    assert kb * cfg.bz == k and nnz == cfg.nnz, (x_q.shape, w_vals.shape, cfg)
+    tm, tk, tn = _resolve_tiles(m, k, n, cfg, tm, tk, tn, "w_int8")
+    tkb = tk // cfg.bz
+    nk = k // tk
+    grid = (m // tm, n // tn, nk)
+    scale_row = ref.combined_scale(x_scale, w_scale, n)
+    in_specs = [
+        pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tkb, nnz, tn), lambda i, j, kk: (kk, 0, j)),
+        pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+    ]
+    operands = [x_q, w_vals, w_mask, scale_row]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
+    return pl.pallas_call(
+        functools.partial(
+            _dbb_matmul_int8_kernel, cfg=cfg, nk=nk, act=act,
+            has_bias=bias is not None,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cfg_a", "cfg_w", "tm", "tk", "tn", "out_dtype", "act", "interpret"
+    ),
+)
+def dbb_matmul_aw_int8_pallas(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    x_scale: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    *,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    tm: Optional[int] = None,
+    tk: Optional[int] = None,
+    tn: Optional[int] = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """INT8 joint A/W-DBB matmul: both operands stream packed int8
+    (S2TA-AW at the paper's precision), int32 accumulation, fused
+    dequant+bias+act flush."""
+    m, kb_a, nnz_a = x_vals.shape
+    kb, nnz_w, n = w_vals.shape
+    assert x_vals.dtype == jnp.int8 and w_vals.dtype == jnp.int8
+    assert kb_a == kb and nnz_a == cfg_a.nnz and nnz_w == cfg_w.nnz
+    k = kb * cfg_w.bz
+    tm, tk, tn = _resolve_tiles(m, k, n, cfg_w, tm, tk, tn, "aw_int8")
+    tkb = tk // cfg_w.bz
+    nk = k // tk
+    grid = (m // tm, n // tn, nk)
+    scale_row = ref.combined_scale(x_scale, w_scale, n)
+    in_specs = [
+        pl.BlockSpec((tm, tkb, nnz_a), lambda i, j, kk: (i, kk, 0)),
+        pl.BlockSpec((tm, tkb), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tkb, nnz_w, tn), lambda i, j, kk: (kk, 0, j)),
+        pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+    ]
+    operands = [x_vals, x_mask, w_vals, w_mask, scale_row]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
+    return pl.pallas_call(
+        functools.partial(
+            _dbb_matmul_aw_int8_kernel,
+            cfg_a=cfg_a,
+            cfg_w=cfg_w,
+            nk=nk,
+            act=act,
+            has_bias=bias is not None,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.int32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

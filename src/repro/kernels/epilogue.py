@@ -52,3 +52,25 @@ def apply_epilogue(
     if bias is not None:
         acc_f32 = acc_f32 + bias.astype(jnp.float32)
     return apply_act(acc_f32, act)
+
+
+def apply_dequant_epilogue(
+    acc_i32: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array],
+    act: Optional[str],
+) -> jax.Array:
+    """INT8-path epilogue: ``act(scale * acc + bias)`` in one pass.
+
+    ``acc_i32`` is the exact int32 accumulator of an int8×int8 matmul;
+    ``scale`` is the combined dequant scale (``x_scale * w_scale``,
+    shape ``[N]`` or ``[1, N]`` — per output channel).  Dequantization,
+    bias add and activation all happen on the f32 register tile inside
+    the same accumulator flush, so the int8 kernels drain straight to
+    the output dtype with no extra HBM pass (the S2TA output pipeline,
+    paper §6).  Shared by the Pallas kernels and the jnp oracles, so
+    int8 kernel-vs-oracle parity is *bit-exact*.
+    """
+    return apply_epilogue(
+        acc_i32.astype(jnp.float32) * scale.astype(jnp.float32), bias, act
+    )

@@ -22,9 +22,14 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dbb
+from repro.core import dbb, quant
 from repro.kernels import ref
-from repro.kernels.dbb_matmul import dbb_matmul_aw_pallas, dbb_matmul_pallas
+from repro.kernels.dbb_matmul import (
+    dbb_matmul_aw_int8_pallas,
+    dbb_matmul_aw_pallas,
+    dbb_matmul_int8_pallas,
+    dbb_matmul_pallas,
+)
 from repro.kernels.dap_prune import dap_prune_pallas
 
 Impl = Literal["jnp", "pallas", "interpret"]
@@ -95,6 +100,77 @@ def dbb_matmul_aw(
     )
 
 
+def dbb_matmul_int8(
+    x: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    cfg: dbb.DBBConfig,
+    *,
+    impl: Impl = "jnp",
+    x_scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    out_dtype=None,
+    **tile_kw,
+) -> jax.Array:
+    """Quantized W-DBB matmul (int8 wire, int32 accumulate, fused dequant).
+
+    ``x`` may be float (quantized here with a dynamic per-tensor scale)
+    or already int8 with ``x_scale`` supplied.  Weights come from
+    :func:`pack_weight_int8`.  Output is float (``out_dtype``, default:
+    the float input's dtype, else f32).
+    """
+    if x.dtype != jnp.int8:
+        out_dtype = out_dtype or x.dtype
+        x, x_scale = ref.quantize_act_int8(x)
+    elif x_scale is None:
+        raise ValueError("int8 x requires x_scale")
+    out_dtype = out_dtype or jnp.float32
+    if impl == "jnp":
+        return ref.dbb_matmul_int8_ref(
+            x, x_scale, w_vals, w_mask, w_scale, cfg,
+            out_dtype=out_dtype, bias=bias, act=act,
+        )
+    return dbb_matmul_int8_pallas(
+        x, x_scale, w_vals, w_mask, w_scale,
+        cfg=cfg, bias=bias, act=act, out_dtype=out_dtype,
+        interpret=(impl == "interpret"),
+        **tile_kw,
+    )
+
+
+def dbb_matmul_aw_int8(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    x_scale: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    *,
+    impl: Impl = "jnp",
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    out_dtype=jnp.float32,
+    **tile_kw,
+) -> jax.Array:
+    """Quantized joint A/W-DBB matmul: both operands packed **int8**
+    (from :func:`dap_pack_int8` / :func:`pack_weight_int8`)."""
+    if impl == "jnp":
+        return ref.dbb_matmul_aw_int8_ref(
+            x_vals, x_mask, x_scale, w_vals, w_mask, w_scale, cfg_a, cfg_w,
+            out_dtype=out_dtype, bias=bias, act=act,
+        )
+    return dbb_matmul_aw_int8_pallas(
+        x_vals, x_mask, x_scale, w_vals, w_mask, w_scale,
+        cfg_a=cfg_a, cfg_w=cfg_w, bias=bias, act=act, out_dtype=out_dtype,
+        interpret=(impl == "interpret"),
+        **tile_kw,
+    )
+
+
 def dap_prune(
     x: jax.Array,
     nnz: int,
@@ -133,6 +209,23 @@ def dap_pack(
     return dbb.pack_bitmask(x, dbb.DBBConfig(nnz, bz))
 
 
+def dap_pack_int8(
+    x: jax.Array,
+    nnz: int,
+    bz: int = dbb.DEFAULT_BZ,
+):
+    """Fused DAP-prune + pack + quantize: dense ``[..., K]`` -> int8 wire.
+
+    Returns ``(vals [..., K//BZ, NNZ] int8, mask [..., K//BZ] uint8,
+    scale f32 scalar)`` — one block-topk pass selects and packs
+    (:func:`dap_pack`), then the kept values quantize with a dynamic
+    per-tensor scale (the amax of the packed values equals the amax of
+    the DAP-pruned tensor, since Top-NNZ keeps each block's largest
+    magnitudes).  Producer side of :func:`dbb_matmul_aw_int8`.
+    """
+    return dbb.pack_bitmask_int8(x, dbb.DBBConfig(nnz, bz))
+
+
 def expand_act(vals: jax.Array, mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Array:
     """Wire-format activations -> dense ``[..., K]`` (fallback hand-off
     for consumers without a packed-operand kernel)."""
@@ -142,3 +235,5 @@ def expand_act(vals: jax.Array, mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Arra
 # Re-export the packers so users need only `repro.kernels.ops`.
 pack_weight = ref.pack_weight_for_kernel
 pack_act = ref.pack_act_for_kernel
+pack_weight_int8 = ref.pack_weight_int8
+quantize_act = ref.quantize_act_int8

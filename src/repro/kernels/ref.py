@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dbb
+from repro.core import dbb, quant
 from repro.kernels import epilogue
 
 
@@ -106,6 +106,84 @@ def dbb_matmul_aw_ref(
     return dbb_matmul_ref(
         x_dense, w_vals, w_mask, cfg_w, out_dtype=out_dtype, bias=bias, act=act
     )
+
+
+# ------------------------------------------------------------- INT8 oracles
+
+
+def combined_scale(x_scale: jax.Array, w_scale: jax.Array, n: int) -> jax.Array:
+    """The dequant row ``[1, N] = x_scale * w_scale`` shared by kernels
+    and oracles — one definition so both sides multiply identically and
+    int8 parity stays bit-exact."""
+    return (
+        x_scale.astype(jnp.float32) * w_scale.astype(jnp.float32)
+    ).reshape(1, n)
+
+
+def dbb_matmul_int8_ref(
+    x_q: jax.Array,
+    x_scale: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    cfg: dbb.DBBConfig,
+    out_dtype=jnp.float32,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+) -> jax.Array:
+    """Quantized W-DBB matmul oracle — the bit-defined int8 reference.
+
+    ``x_q [M, K] int8`` with per-tensor ``x_scale``; weights in int8 wire
+    format (``w_vals [K//BZ, NNZ, N] int8``, ``w_mask``, per-channel
+    ``w_scale [N]``).  Accumulates int8×int8 in **int32** (exact, so
+    tiled kernel accumulation matches this dense dot bit-for-bit), then
+    dequantizes through the shared fused epilogue.
+    """
+    w_dense = decode_w(w_vals, w_mask, cfg)  # [K, N] int8 (decode is exact)
+    acc = jnp.dot(x_q, w_dense, preferred_element_type=jnp.int32)
+    scale = combined_scale(x_scale, w_scale, w_dense.shape[-1])
+    y = epilogue.apply_dequant_epilogue(acc, scale, bias, act)
+    return y.astype(out_dtype)
+
+
+def dbb_matmul_aw_int8_ref(
+    x_vals: jax.Array,
+    x_mask: jax.Array,
+    x_scale: jax.Array,
+    w_vals: jax.Array,
+    w_mask: jax.Array,
+    w_scale: jax.Array,
+    cfg_a: dbb.DBBConfig,
+    cfg_w: dbb.DBBConfig,
+    out_dtype=jnp.float32,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+) -> jax.Array:
+    """Quantized joint A/W-DBB oracle: both operands stream packed int8."""
+    x_dense = decode_a(x_vals, x_mask, cfg_a)  # [M, K] int8
+    return dbb_matmul_int8_ref(
+        x_dense, x_scale, w_vals, w_mask, w_scale, cfg_w,
+        out_dtype=out_dtype, bias=bias, act=act,
+    )
+
+
+def pack_weight_int8(w: jax.Array, cfg: dbb.DBBConfig):
+    """Dense ``w [K, N]`` -> int8 wire format (prunes if needed).
+
+    Returns ``(w_vals [K//BZ, NNZ, N] int8, w_mask [K//BZ, N] uint8,
+    w_scale [N] f32)`` — symmetric per-output-channel scales (each
+    column ``n`` quantizes on its own amax, the standard weight scheme).
+    """
+    # pack w.T so the channel axis leads: [N, KB, NNZ]; scale over (1, 2)
+    q, mask, scale = dbb.pack_bitmask_int8(w.T, cfg, scale_axis=(1, 2))
+    return jnp.moveaxis(q, 0, -1), jnp.moveaxis(mask, 0, -1), scale
+
+
+def quantize_act_int8(x: jax.Array):
+    """Dense activations -> ``(int8 [..., K], f32 scalar scale)`` with a
+    per-tensor *dynamic* scale (recomputed per call — activations have
+    no stable range, unlike weights)."""
+    return quant.quantize(x)
 
 
 def dap_prune_ref(x: jax.Array, nnz: int, bz: int = dbb.DEFAULT_BZ):

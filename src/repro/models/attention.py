@@ -60,6 +60,28 @@ def _update_ring(cache_layer, new_k, new_v, pos: jax.Array, window: int):
     return {"k": k, "v": v, "pos": posv}
 
 
+def fill_ring(cache_layer, new_k, new_v, s: int):
+    """Write a whole prompt (absolute positions ``0..s-1``) into the ring.
+
+    The prefill-side counterpart of :func:`_update_ring`: keeps the last
+    ``min(window, s)`` tokens at slots ``pos % window`` — exactly the
+    state per-token stepping would have left behind.  ``new_k/new_v``
+    are ``[B, S, KVD]`` (already RoPE'd where applicable).
+    """
+    window = cache_layer["k"].shape[1]
+    b = new_k.shape[0]
+    take = min(window, s)
+    sel = jnp.arange(s - take, s)
+    slots = jnp.mod(sel, window)
+    return {
+        "k": cache_layer["k"].at[:, slots].set(new_k[:, sel]),
+        "v": cache_layer["v"].at[:, slots].set(new_v[:, sel]),
+        "pos": cache_layer["pos"].at[:, slots].set(
+            jnp.broadcast_to(sel, (b, take)).astype(jnp.int32)
+        ),
+    }
+
+
 # ------------------------------------------------------------ core attention
 
 
@@ -264,6 +286,25 @@ def gqa_forward(
     q = rope.apply_rope(q, cos, sin)
     k = rope.apply_rope(k, cos, sin)
 
+    if cache_layer is not None and decode_pos is None:
+        # Single-pass prefill: full-sequence attention over the fresh K/V
+        # (identical math to the cache-less path below) while the same
+        # projections fill the ring — the layer stack runs ONCE per
+        # prompt, no K/V-recompute second pass (see lm.prefill).
+        new_cache = fill_ring(
+            cache_layer,
+            k.reshape(b, s, kvh * dh),
+            v.reshape(b, s, kvh * dh),
+            s,
+        )
+        out = mha(
+            q, k, v, positions, positions,
+            window=cfg.sliding_window,
+            chunk=cfg.attn_chunk if s > cfg.attn_chunk else None,
+        )
+        y = linear(p["wo"], out.reshape(b, s, h * dh), sparsity=sp, layer_idx=li)
+        return y, new_cache
+
     if cache_layer is not None:
         window = cache_layer["k"].shape[1]
         from repro.sharding import context as dist_ctx
@@ -370,6 +411,18 @@ def mla_forward(
 
     w_kv_up = p["kv_up"]["w"].reshape(m.kv_lora_rank, h, qk_nope + dv)
 
+    if cache_layer is not None and decode_pos is None:
+        # Single-pass prefill: materialized attention (below) + latent
+        # ring fill in the same trace — the cache stores (c_kv ‖ k_rope),
+        # exactly what per-token absorbed decode would have written.
+        latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+        new_cache = fill_ring(
+            cache_layer, latent, jnp.zeros((b, s, 1), latent.dtype), s
+        )
+        cache_layer = None  # fall through to the materialized path
+    else:
+        new_cache = None
+
     if cache_layer is not None:
         window = cache_layer["k"].shape[1]
         latent = jnp.concatenate([c_kv, k_rope], axis=-1)  # [B, S, lora+rope]
@@ -419,7 +472,7 @@ def mla_forward(
         softmax_scale=scale,
     )
     y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)
-    return y, None
+    return y, new_cache
 
 
 # --------------------------------------------------------------- cross-attn

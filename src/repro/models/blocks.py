@@ -59,6 +59,9 @@ def decoder_block(
     {"ssm_state", "ssm_conv"} merged in the same dict.
     """
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    # cache_layer with decode_pos=None means single-pass prefill: the
+    # attention layer fills its own ring in-trace (attention.fill_ring)
+    prefill_fill = cache_layer is not None and decode_pos is None
     attn_cache = None
     if cache_layer is not None:
         attn_cache = {k: cache_layer[k] for k in ("k", "v", "pos")}
@@ -76,8 +79,11 @@ def decoder_block(
 
     new_cache = None
     if cfg.family == "hybrid":
+        # prefill-fill: run the mixer cache-less (the chunked scan has no
+        # exact one-shot state fill — engines step hybrids for decode
+        # exactness) while the attention ring above still filled exactly
         ssm_cache = None
-        if cache_layer is not None:
+        if cache_layer is not None and not prefill_fill:
             ssm_cache = {"state": cache_layer["ssm_state"], "conv": cache_layer["ssm_conv"]}
         s_out, new_ssm_cache = ssm_mod.mamba2_forward(
             p["ssm"], h, cfg, layer_idx=layer_idx, cache_layer=ssm_cache
@@ -90,8 +96,12 @@ def decoder_block(
         x = x + mixed
         if cache_layer is not None:
             new_cache = dict(new_attn_cache)
-            new_cache["ssm_state"] = new_ssm_cache["state"]
-            new_cache["ssm_conv"] = new_ssm_cache["conv"]
+            if prefill_fill:  # recurrent state passes through untouched
+                new_cache["ssm_state"] = cache_layer["ssm_state"]
+                new_cache["ssm_conv"] = cache_layer["ssm_conv"]
+            else:
+                new_cache["ssm_state"] = new_ssm_cache["state"]
+                new_cache["ssm_conv"] = new_ssm_cache["conv"]
     else:
         x = x + a_out
         new_cache = new_attn_cache

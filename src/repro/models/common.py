@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import dbb
+from repro.core import dbb, quant
 from repro.core.dap import apply_dap
 from repro.core.sparsity import SparsityConfig
 from repro.kernels import epilogue, ops
@@ -105,13 +105,18 @@ class PackedAct:
 
     Not a jax pytree on purpose: it lives strictly inside a single traced
     forward pass and never crosses a jit boundary.
+
+    Under the int8 wire (``wire_dtype="int8"`` serving) ``vals`` is int8
+    and ``scale`` holds the dynamic per-tensor dequant scale; ``dtype``
+    still names the dense *compute* dtype outputs are produced in.
     """
 
-    vals: jax.Array  # [..., K//BZ, NNZ]
+    vals: jax.Array  # [..., K//BZ, NNZ] (model dtype, or int8 wire)
     mask: jax.Array  # [..., K//BZ] uint8
     cfg: dbb.DBBConfig
     k: int  # dense extent of the packed axis
     dtype: jnp.dtype  # dense dtype (outputs keep it)
+    scale: Optional[jax.Array] = None  # f32 scalar; set iff vals is int8
 
 
 ActOrPacked = Union[jax.Array, PackedAct]
@@ -156,6 +161,9 @@ def maybe_pack_input(
     spec = _active_dap_spec(sparsity, x, layer_idx, first_layer)
     if spec is None:
         return x
+    if all("w_scale" in t for t in targets):  # int8 wire end to end
+        vals, mask, scale = ops.dap_pack_int8(x, spec.nnz, spec.bz)
+        return PackedAct(vals, mask, spec.cfg, x.shape[-1], x.dtype, scale)
     vals, mask = ops.dap_pack(x, spec.nnz, spec.bz)
     return PackedAct(vals, mask, spec.cfg, x.shape[-1], x.dtype)
 
@@ -203,29 +211,47 @@ def linear(
     * packed input: ``x`` may be a :class:`PackedAct` (the fused
       ``dap_prune -> pack`` hand-off); with wire-format weights this runs
       the joint A/W-DBB matmul — both operands stream packed.
+    * int8 wire (``p`` holds ``w_scale``): the paper's actual datapath —
+      int8 values on the wire, int32 accumulation, dequant (per-channel
+      weight scale × dynamic per-tensor activation scale) fused into the
+      same epilogue as bias+act.
     """
     sp = sparsity
     if isinstance(x, PackedAct):
         if "w_vals" in p:  # joint A/W-DBB: both operands packed
             cfg_w = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
             lead = x.vals.shape[:-2]
-            y2 = ops.dbb_matmul_aw(
-                x.vals.reshape((-1,) + x.vals.shape[-2:]),
-                x.mask.reshape((-1,) + x.mask.shape[-1:]),
-                p["w_vals"],
-                p["w_mask"],
-                x.cfg,
-                cfg_w,
-                impl="jnp",
-                bias=p.get("b"),
-                act=act,
-                out_dtype=x.dtype,
-            )
+            vals2 = x.vals.reshape((-1,) + x.vals.shape[-2:])
+            mask2 = x.mask.reshape((-1,) + x.mask.shape[-1:])
+            if "w_scale" in p:  # int8 wire on both operands
+                vals2, x_scale = (
+                    (vals2, x.scale)
+                    if x.scale is not None
+                    # bf16-packed input meets int8 weights (mixed targets):
+                    # quantize the packed values in place, per-tensor
+                    else quant.quantize(vals2)
+                )
+                y2 = ops.dbb_matmul_aw_int8(
+                    vals2, mask2, x_scale,
+                    p["w_vals"], p["w_mask"], p["w_scale"],
+                    x.cfg, cfg_w,
+                    impl="jnp", bias=p.get("b"), act=act, out_dtype=x.dtype,
+                )
+            else:
+                if x.scale is not None:  # int8-packed input, bf16 weights
+                    vals2 = quant.dequantize(vals2, x.scale, dtype=x.dtype)
+                y2 = ops.dbb_matmul_aw(
+                    vals2, mask2, p["w_vals"], p["w_mask"], x.cfg, cfg_w,
+                    impl="jnp", bias=p.get("b"), act=act, out_dtype=x.dtype,
+                )
             return y2.reshape(lead + y2.shape[-1:])
         # Dense weights can't consume the wire format: expand (exact) and
         # continue on the dense path.  DAP is NOT re-applied — packing
         # already pruned.
-        x = ops.expand_act(x.vals, x.mask, x.cfg)
+        vals = x.vals
+        if x.scale is not None:
+            vals = quant.dequantize(vals, x.scale, dtype=x.dtype)
+        x = ops.expand_act(vals, x.mask, x.cfg)
     elif dap_input:
         spec = _active_dap_spec(sp, x, layer_idx, first_layer)
         if spec is not None:
@@ -234,16 +260,17 @@ def linear(
     if "w_vals" in p:  # packed serving weights, dense activations
         cfg = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
         lead = x.shape[:-1]
-        y2 = ops.dbb_matmul(
-            x.reshape(-1, x.shape[-1]),
-            p["w_vals"],
-            p["w_mask"],
-            cfg,
-            impl="jnp",
-            bias=p.get("b"),
-            act=act,
-            out_dtype=x.dtype,
-        )
+        x2 = x.reshape(-1, x.shape[-1])
+        if "w_scale" in p:  # int8 wire: dynamic per-tensor act quant
+            y2 = ops.dbb_matmul_int8(
+                x2, p["w_vals"], p["w_mask"], p["w_scale"], cfg,
+                impl="jnp", bias=p.get("b"), act=act, out_dtype=x.dtype,
+            )
+        else:
+            y2 = ops.dbb_matmul(
+                x2, p["w_vals"], p["w_mask"], cfg,
+                impl="jnp", bias=p.get("b"), act=act, out_dtype=x.dtype,
+            )
         return y2.reshape(*lead, y2.shape[-1])
     y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
     if "b" in p:
@@ -253,20 +280,30 @@ def linear(
     return epilogue.apply_act(y, act)
 
 
-def pack_linear_params(p, sp: SparsityConfig):
+def pack_linear_params(p, sp: SparsityConfig, wire_dtype: str = "native"):
     """Convert a dense linear param dict to packed DBB wire format.
 
-    Handles both plain ``[K, N]`` weights and layer-stacked ``[L, K, N]``
-    (scan layout) — the stack dim is vmapped, so scanning slices the
-    packed tensors exactly like dense ones.
+    ``wire_dtype="native"`` keeps the model dtype for the wire values;
+    ``"int8"`` quantizes them (symmetric per-output-channel scales,
+    ``repro.core.quant``) and adds ``w_scale`` so :func:`linear` runs the
+    int8 kernels.  Handles both plain ``[K, N]`` weights and
+    layer-stacked ``[L, K, N]`` (scan layout) — the stack dim is
+    vmapped, so scanning slices the packed tensors exactly like dense
+    ones.
     """
+    if wire_dtype not in ("native", "int8"):
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}; native|int8")
     cfg = dbb.DBBConfig(sp.w_nnz, sp.bz)
     w = p["w"]
-    if w.ndim == 3:
-        w_vals, w_mask = jax.vmap(lambda wi: ops.pack_weight(wi, cfg))(w)
-    else:
-        w_vals, w_mask = ops.pack_weight(w, cfg)
-    out = {"w_vals": w_vals, "w_mask": w_mask}
+    pack_one = (
+        (lambda wi: ops.pack_weight_int8(wi, cfg))
+        if wire_dtype == "int8"
+        else (lambda wi: ops.pack_weight(wi, cfg))
+    )
+    packed = jax.vmap(pack_one)(w) if w.ndim == 3 else pack_one(w)
+    out = {"w_vals": packed[0], "w_mask": packed[1]}
+    if wire_dtype == "int8":
+        out["w_scale"] = packed[2]
     if "b" in p:
         out["b"] = p["b"]
     return out

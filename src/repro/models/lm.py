@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models import attention as attn_mod
 from repro.models import blocks, rope, ssm as ssm_mod
 from repro.models.common import (
     BATCH_AXES,
@@ -260,12 +259,24 @@ def decode_step(params, cache, tokens: jax.Array, pos, cfg):
 
 def prefill(params, tokens, cfg, cache=None):
     """Prefill: forward pass; if ``cache`` given, also fills it and returns
-    (logits, cache) — logits only otherwise."""
-    logits, _ = forward(params, tokens, cfg)
+    (logits, cache) — logits only otherwise.
+
+    **Single-pass**: one scan over the layer stack emits both the logits
+    and the filled cache.  Each attention layer computes its full-sequence
+    attention *and* writes its own (already projected, already RoPE'd)
+    K/V into the ring in the same trace (``attention.fill_ring``) — the
+    seed-era design ran the stack twice (forward for logits, then a
+    K/V-recompute scan), doubling batched-prefill FLOPs.
+
+    Exactness: the ring ends up bit-identical to what per-token stepping
+    writes (same projections through the same DBB-aware linear path), so
+    batched prefill stays token-exact vs stepped decode.  SSM keeps its
+    conv-tail/zero-state fill; hybrid fills only the attention ring (the
+    recurrent state passes through untouched — no exact one-shot fill
+    yet) — both families are served stepped by the engine anyway.
+    """
     if cache is None:
-        return logits
-    # fill cache by re-projecting K/V per layer (simple, compile-friendly):
-    # serving engines call this once per request; see repro/serve/engine.py.
+        return forward(params, tokens, cfg)[0]
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     x = _embed(params, tokens, cfg)
@@ -273,46 +284,28 @@ def prefill(params, tokens, cfg, cache=None):
     if cfg.family != "ssm" and cfg.mla is None:
         rope_cs = _rope_cs(cfg, positions)
 
-    def body(carry, inp):
-        layer_p, cache_layer = inp
-        if cfg.family == "ssm":
+    if cfg.family == "ssm":
+
+        def body(carry, inp):
+            layer_p, cache_layer = inp
             h = rmsnorm(carry, layer_p["ln"], cfg.norm_eps)
-            y, new_c = ssm_mod.mamba2_forward(layer_p["mixer"], h, cfg)
+            y, _ = ssm_mod.mamba2_forward(layer_p["mixer"], h, cfg)
             # state fill for SSM prefill uses the chunked path's final state;
             # engines re-run decode for exactness. Keep conv tail + zero state.
-            new_cache = dict(cache_layer)
-            return carry + y, new_cache
-        y, _, _ = blocks.decoder_block(layer_p, carry, cfg, positions, rope_cs=rope_cs)
-        # recompute k/v for the cache fill — through the same DBB-aware
-        # linear path as decode (DAP + packed weights), so the cache is
-        # bit-identical to what per-token stepping would have written
-        h = rmsnorm(carry, layer_p["ln1"], cfg.norm_eps)
-        window = cache_layer["k"].shape[1]
-        kvh, dh = cfg.n_kv_heads, cfg.head_dim()
-        sp = cfg.sparsity
-        if cfg.mla is None:
-            k = linear(layer_p["attn"]["wk"], h, sparsity=sp).reshape(b, s, kvh, dh)
-            v = linear(layer_p["attn"]["wv"], h, sparsity=sp).reshape(b, s, kvh * dh)
-            k = rope.apply_rope(k, *rope_cs).reshape(b, s, kvh * dh)
-        else:
-            m = cfg.mla
-            kv = linear(layer_p["attn"]["kv_down"], h, sparsity=sp)
-            c_kv = rmsnorm(kv[..., : m.kv_lora_rank], layer_p["attn"]["kv_norm"])
-            kr = kv[..., m.kv_lora_rank :][:, :, None, :]
-            cs2 = rope.rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
-            kr = rope.apply_rope(kr, *cs2)[:, :, 0, :]
-            k = jnp.concatenate([c_kv, kr], axis=-1)
-            v = jnp.zeros((b, s, 1), k.dtype)
-        take = min(window, s)
-        sel = jnp.arange(s - take, s)
-        slots = jnp.mod(sel, window)
-        new_cache = dict(cache_layer)
-        new_cache["k"] = cache_layer["k"].at[:, slots].set(k[:, sel])
-        new_cache["v"] = cache_layer["v"].at[:, slots].set(v[:, sel])
-        new_cache["pos"] = cache_layer["pos"].at[:, slots].set(
-            jnp.broadcast_to(sel, (b, take)).astype(jnp.int32)
-        )
-        return y, new_cache
+            return carry + y, dict(cache_layer)
 
-    _, new_cache = scan_over_layers(body, x, (params["layers"], cache), cfg)
+    else:  # attention families (incl. hybrid): the block fills its own
+        # cache in-pass (hybrid: the attention ring only — the SSM state
+        # passes through untouched; engines step hybrids for exactness)
+
+        def body(carry, inp):
+            layer_p, cache_layer = inp
+            y, new_c, _ = blocks.decoder_block(
+                layer_p, carry, cfg, positions,
+                cache_layer=cache_layer, rope_cs=rope_cs,
+            )
+            return y, new_c
+
+    x, new_cache = scan_over_layers(body, x, (params["layers"], cache), cfg)
+    logits = _head(params, x, cfg)
     return logits, new_cache

@@ -4,10 +4,16 @@ technique applied to inference bandwidth).
 
 Prefill is **batched**: the whole prompt goes through one jitted
 chunked-prefill call (``lm.prefill`` — attention is query-chunked
-internally, and the KV cache is filled in the same trace), so a prompt of
-``S0`` tokens costs O(1) Python→XLA dispatches instead of the seed's
-``S0`` sequential decode steps.  Sampling (vocab slice + argmax) is jitted
-too, so the decode loop does exactly one dispatch per generated token.
+internally, and the layer stack runs ONCE: each attention layer fills its
+own KV ring in the same trace, no logits-then-recompute double pass), so
+a prompt of ``S0`` tokens costs O(1) Python→XLA dispatches instead of the
+seed's ``S0`` sequential decode steps.  Sampling (vocab slice + argmax)
+is jitted too, so the decode loop does exactly one dispatch per token.
+
+``ServeConfig(pack_weights=True, wire_dtype="int8")`` serves the paper's
+actual INT8 datapath: weights quantize to int8 wire at engine build
+(per-channel scales) and the packed activation hand-off runs int8 with
+the dequant fused into the matmul epilogues.
 
 SSM and hybrid families keep the stepped prefill: their recurrent state
 has no exact one-shot cache fill in ``lm.prefill`` (the chunked scan
@@ -35,11 +41,17 @@ class ServeConfig:
     max_seq: int = 512
     temperature: float = 0.0  # 0 = greedy
     pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
+    wire_dtype: str = "native"  # native | int8 (paper's int8 datapath)
     prefill_mode: str = "auto"  # auto | batched | stepped
 
 
-def pack_params_for_serving(params, cfg):
-    """Convert every DBB-eligible linear to packed wire format."""
+def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
+    """Convert every DBB-eligible linear to packed wire format.
+
+    ``wire_dtype="int8"`` quantizes the wire values (per-channel scales)
+    so serving runs the int8 kernels end to end: int8 values + bitmask
+    from HBM, int32 accumulate, dequant fused in the epilogue.
+    """
     sp = cfg.sparsity
 
     def walk(p, path=""):
@@ -54,7 +66,7 @@ def pack_params_for_serving(params, cfg):
                     and p["w"].shape[-2] % sp.bz == 0
                 )
                 if eligible:
-                    return common.pack_linear_params(p, sp)
+                    return common.pack_linear_params(p, sp, wire_dtype)
             return {k: walk(v, path + "/" + k) for k, v in p.items()}
         return p
 
@@ -66,8 +78,21 @@ class Engine:
 
     def __init__(self, params, cfg, scfg: ServeConfig):
         self.cfg, self.scfg = cfg, scfg
-        if scfg.pack_weights and cfg.sparsity.mode in ("wdbb", "awdbb"):
-            params = pack_params_for_serving(params, cfg)
+        if scfg.wire_dtype not in ("native", "int8"):
+            raise ValueError(
+                f"unknown wire_dtype {scfg.wire_dtype!r}; native|int8"
+            )
+        packing = scfg.pack_weights and cfg.sparsity.mode in ("wdbb", "awdbb")
+        if scfg.wire_dtype != "native" and not packing:
+            # never serve full precision while the caller believes the
+            # int8 wire is active
+            raise ValueError(
+                "wire_dtype='int8' requires pack_weights=True and a "
+                f"wdbb/awdbb sparsity mode (got pack_weights="
+                f"{scfg.pack_weights}, mode={cfg.sparsity.mode!r})"
+            )
+        if packing:
+            params = pack_params_for_serving(params, cfg, scfg.wire_dtype)
         self.params = params
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)

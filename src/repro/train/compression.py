@@ -5,7 +5,9 @@ quantization shrinks ICI bytes).
 
 Per-tensor symmetric int8 quantization with error feedback (EF-SGD):
 the quantization residual is carried to the next step so compression
-noise does not bias convergence.
+noise does not bias convergence.  The quant math itself lives in
+``repro.core.quant`` — the same helpers the INT8 kernel wire format
+uses — so the two int8 users of the framework cannot drift apart.
 """
 
 from __future__ import annotations
@@ -13,17 +15,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 
 def quantize(g: jax.Array):
     """g -> (int8 q, f32 scale).  Symmetric per-tensor."""
-    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.quantize(g)
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return quant.dequantize(q, scale)
 
 
 def compress_tree(grads, residuals):

@@ -134,6 +134,126 @@ def test_dbb_matmul_aw_epilogue_kernel_vs_ref(act, nnz_a, nnz_w):
     np.testing.assert_allclose(np.array(y_k), np.array(y_ref), atol=1e-5, rtol=1e-5)
 
 
+# ---------------------------------------------------------- INT8 datapath
+
+
+@pytest.mark.parametrize("bias_act", [(False, None), (True, None), (True, "silu")])
+@pytest.mark.parametrize("nnz", [1, 2, 4, 8])
+def test_dbb_matmul_int8_kernel_vs_quant_oracle(nnz, bias_act):
+    """INT8 W-DBB kernel (interpret) vs the quantized jnp oracle:
+    **bit-exact** — int32 accumulation is associative, and the dequant
+    epilogue is the same jitted f32 code on both sides."""
+    has_bias, act = bias_act
+    cfg = dbb.DBBConfig(nnz, 8)
+    m, k, n = 16, 64, 128
+    x = rnd((m, k), jnp.float32, 31)
+    w = rnd((k, n), jnp.float32, 32)
+    b = rnd((n,), jnp.float32, 33) if has_bias else None
+    wv, wm, ws = ops.pack_weight_int8(w, cfg)
+    xq, xs = ops.quantize_act(x)
+    f_ref = jax.jit(
+        lambda: ref.dbb_matmul_int8_ref(xq, xs, wv, wm, ws, cfg, bias=b, act=act)
+    )
+    y_k = ops.dbb_matmul_int8(
+        xq, wv, wm, ws, cfg, impl="interpret", x_scale=xs, bias=b, act=act,
+        tm=16, tk=64, tn=128,
+    )
+    np.testing.assert_array_equal(np.array(y_k), np.array(f_ref()))
+
+
+@pytest.mark.parametrize("bias_act", [(False, None), (True, "silu")])
+@pytest.mark.parametrize("nnz", [1, 2, 4, 8])
+def test_dbb_matmul_aw_int8_kernel_vs_quant_oracle(nnz, bias_act):
+    """INT8 joint A/W-DBB kernel vs quantized oracle — bit-exact, both
+    operands packed int8."""
+    has_bias, act = bias_act
+    cfg_a, cfg_w = dbb.DBBConfig(nnz, 8), dbb.DBBConfig(nnz, 8)
+    m, k, n = 16, 64, 128
+    x = rnd((m, k), jnp.float32, 34)
+    w = rnd((k, n), jnp.float32, 35)
+    b = rnd((n,), jnp.float32, 36) if has_bias else None
+    xv, xm, xs = ops.dap_pack_int8(x, nnz, 8)
+    wv, wm, ws = ops.pack_weight_int8(w, cfg_w)
+    f_ref = jax.jit(
+        lambda: ref.dbb_matmul_aw_int8_ref(
+            xv, xm, xs, wv, wm, ws, cfg_a, cfg_w, bias=b, act=act
+        )
+    )
+    y_k = ops.dbb_matmul_aw_int8(
+        xv, xm, xs, wv, wm, ws, cfg_a, cfg_w, impl="interpret",
+        bias=b, act=act, tm=16, tk=64, tn=128,
+    )
+    np.testing.assert_array_equal(np.array(y_k), np.array(f_ref()))
+
+
+@pytest.mark.parametrize("nnz", [2, 4])
+def test_int8_oracle_tracks_fp_oracle(nnz):
+    """The quantized oracle approximates the fp oracle to quantization
+    noise — int8 is a *numerics* change, not a semantics change."""
+    cfg = dbb.DBBConfig(nnz, 8)
+    m, k, n = 32, 128, 128
+    x = rnd((m, k), jnp.float32, 41)
+    w = rnd((k, n), jnp.float32, 42)
+    wv, wm = ops.pack_weight(w, cfg)
+    wv8, wm8, ws8 = ops.pack_weight_int8(w, cfg)
+    np.testing.assert_array_equal(np.array(wm8), np.array(wm))
+    y_fp = ref.dbb_matmul_ref(x, wv, wm, cfg, out_dtype=jnp.float32)
+    y_i8 = ops.dbb_matmul_int8(x, wv8, wm8, ws8, cfg, impl="jnp")
+    # error budget: one half-step per operand pair, ~sqrt(K) accumulation
+    denom = np.abs(np.array(y_fp)).max()
+    rel = np.abs(np.array(y_i8) - np.array(y_fp)).max() / denom
+    assert rel < 0.05, rel
+
+
+def test_int8_wire_roundtrip():
+    """pack_bitmask_int8 -> expand_bitmask_int8 == prune + quant grid."""
+    cfg = dbb.DBBConfig(4, 8)
+    x = rnd((6, 48), jnp.float32, 43)
+    q, mask, scale = dbb.pack_bitmask_int8(x, cfg)
+    assert q.dtype == jnp.int8 and mask.dtype == jnp.uint8
+    dense = dbb.expand_bitmask_int8(q, mask, scale, cfg)
+    pruned = dbb.prune(x, cfg)
+    # support can only shrink (a kept value may round to wire 0) and the
+    # result still satisfies the block bound
+    assert not np.any(np.array(dense)[np.array(pruned) == 0])
+    err = np.abs(np.array(dense) - np.array(pruned))
+    assert err.max() <= float(scale) * 0.5 + 1e-7
+    assert bool(dbb.satisfies(jnp.asarray(dense), cfg))
+
+
+def test_linear_mixed_wire_dispatch():
+    """The defensive cross-wire branches in common.linear: a native
+    PackedAct meeting int8 weights (mixed consumer group — reachable via
+    hand-mixed pack_linear_params calls) quantizes in place, and an int8
+    PackedAct meeting unpacked weights dequantizes-expands."""
+    from repro.core.sparsity import SparsityConfig
+    from repro.models import common
+
+    sp = SparsityConfig(mode="awdbb", w_nnz=4, a_nnz=4)
+    p_dense, _ = common.make_linear(
+        jax.random.PRNGKey(0), 64, 128, dtype=jnp.float32
+    )
+    p_native = common.pack_linear_params(p_dense, sp)
+    p_int8 = common.pack_linear_params(p_dense, sp, "int8")
+    x = rnd((2, 3, 64), jnp.float32, 50)
+    # mixed group: not all targets int8 -> native PackedAct produced
+    xin = common.maybe_pack_input(x, (p_native, p_int8), sp, layer_idx=1)
+    assert isinstance(xin, common.PackedAct) and xin.scale is None
+    y_mixed = common.linear(p_int8, xin, sparsity=sp, layer_idx=1)
+    # uniform int8 group over the same input: same values, same scale
+    xin8 = common.maybe_pack_input(x, (p_int8,), sp, layer_idx=1)
+    assert isinstance(xin8, common.PackedAct) and xin8.scale is not None
+    y_uniform = common.linear(p_int8, xin8, sparsity=sp, layer_idx=1)
+    np.testing.assert_array_equal(np.array(y_mixed), np.array(y_uniform))
+    # int8 PackedAct meeting unpacked weights: dequant-expand fallback,
+    # equal to the native expand up to quantization noise
+    y_fb = common.linear(p_dense, xin8, sparsity=sp, layer_idx=1)
+    y_native = common.linear(p_dense, xin, sparsity=sp, layer_idx=1)
+    np.testing.assert_allclose(
+        np.array(y_fb), np.array(y_native), atol=0.2, rtol=0.1
+    )
+
+
 # ------------------------------------------------------- packed hand-off
 
 

@@ -1,0 +1,84 @@
+"""Property tests for the shared symmetric int8 quant helpers
+(``repro.core.quant``) — used by both the gradient-compression path and
+the INT8 kernel wire format, so the round-trip contract matters twice."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hypo import given, settings, st  # hypothesis-or-skip shim
+
+from repro.core import quant
+from repro.train import compression
+
+
+def rnd(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    mag=st.floats(1e-3, 1e3),
+)
+@settings(max_examples=40, deadline=None)
+def test_prop_quantize_roundtrip_bounded(m, n, seed, mag):
+    """Per-tensor round-trip error is bounded by half a quantization step
+    (scale/2 per element), values live on the symmetric grid, and zero is
+    exactly representable."""
+    x = rnd((m, n), seed, mag)
+    q, scale = quant.quantize(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    deq = quant.dequantize(q, scale)
+    err = np.abs(np.array(deq) - np.array(x, np.float32))
+    assert err.max() <= float(scale) * 0.5 + 1e-7 * mag
+    # exact zeros stay exact through the round-trip
+    z_q, z_s = quant.quantize(jnp.zeros((m, n), jnp.float32))
+    np.testing.assert_array_equal(np.array(z_q), 0)
+    np.testing.assert_array_equal(np.array(quant.dequantize(z_q, z_s)), 0.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_quantize_idempotent_on_grid(seed):
+    """Quantizing an already-dequantized tensor is lossless (the grid is
+    a fixpoint of the round-trip)."""
+    x = rnd((4, 32), seed)
+    q, scale = quant.quantize(x)
+    deq = quant.dequantize(q, scale)
+    q2, scale2 = quant.quantize(deq)
+    np.testing.assert_array_equal(
+        np.array(quant.dequantize(q2, scale2)), np.array(deq)
+    )
+
+
+def test_per_axis_scales():
+    """axis= selects the scale sharing: per-output-channel weight scales
+    quantize each column on its own amax."""
+    x = rnd((16, 4), 0)
+    # make column magnitudes wildly different
+    x = x * jnp.asarray([1e-2, 1.0, 1e2, 1e4])[None, :]
+    q, scale = quant.quantize(x, axis=0)
+    assert scale.shape == (4,)
+    deq = quant.dequantize(q, scale, axis=0)
+    err = np.abs(np.array(deq) - np.array(x))
+    # each column's error bounded by its own half-step — a per-tensor
+    # scale would wipe out the small columns entirely
+    for j in range(4):
+        assert err[:, j].max() <= float(scale[j]) * 0.5 + 1e-7
+    assert np.abs(np.array(q)).max() <= 127
+
+
+def test_compression_uses_shared_quant():
+    """train.compression quantize/dequantize == core.quant per-tensor."""
+    g = rnd((8, 8), 3)
+    q1, s1 = compression.quantize(g)
+    q2, s2 = quant.quantize(g)
+    np.testing.assert_array_equal(np.array(q1), np.array(q2))
+    assert float(s1) == float(s2)
+    np.testing.assert_array_equal(
+        np.array(compression.dequantize(q1, s1)),
+        np.array(quant.dequantize(q2, s2)),
+    )
