@@ -54,6 +54,10 @@ def main() -> None:
     # kernel microbenchmarks (wall time of the DBB ops on this host)
     jobs.append(("kernel_dbb_matmul", kernel_bench.bench_dbb_matmul, {"smoke": smoke}))
     jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {"smoke": smoke}))
+    # serving throughput: continuous batching vs one-shot batched prefill
+    from benchmarks import serve_bench
+
+    jobs.append(("serve_bench", serve_bench.bench_serve, {"smoke": smoke}))
 
     print("name,us_per_call,derived")
     details = []
@@ -62,7 +66,7 @@ def main() -> None:
         rows, derived, us = _timed(fn, **kw)
         print(f"{name},{us:.0f},{derived}")
         details.append((name, rows))
-        if name.startswith("kernel_"):
+        if name.startswith("kernel_") or name == "serve_bench":
             # us_total = sum of the per-impl timed rows — NOT the wall
             # time of the whole bench function (which is dominated by
             # compiles/warmup and was ~5e6 µs even for a smoke run);
@@ -79,9 +83,13 @@ def main() -> None:
                 "wall_us": round(us, 1),
             }
 
-    # machine-readable kernel perf record, tracked across PRs
+    # machine-readable kernel perf record, tracked across PRs.
+    # BENCH_HOST_ID overrides the hostname for the same-machine check in
+    # benchmarks/compare.py — CI sets it to a stable runner-class id so
+    # consecutive runs on interchangeable hosted runners compare their
+    # µs rows (with a loose threshold; see .github/workflows/ci.yml)
     record = {
-        "host": platform.node(),
+        "host": os.environ.get("BENCH_HOST_ID", platform.node()),
         "platform": platform.platform(),
         "cpus": os.cpu_count(),
         "python": platform.python_version(),

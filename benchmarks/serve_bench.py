@@ -1,0 +1,68 @@
+"""Serving-throughput microbenchmark: continuous batching (paged KV,
+chunked-prefill interleaving) vs the one-shot batched-prefill engine on
+identical request sets.
+
+Times whole ``generate`` calls (host scheduling + jitted steps) on a tiny
+CPU config after a warmup pass per engine, and reports tokens/s plus the
+continuous-vs-oneshot ratio.  The ratio is timing-derived, so it is NOT a
+gated metric (benchmarks/compare.py gates only deterministic byte
+ratios); the µs rows ride the same-host >25% slowdown gate like every
+other timed row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def _time_once(fn, passes=3):
+    """Best-of-``passes`` wall seconds (engines are warm: jit cached)."""
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_serve(smoke: bool = False):
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True),
+        vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32",
+    )
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    b, s0, n_new = 4, 16, 16
+    passes = 2 if smoke else 4
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (b, s0)
+    ).astype(np.int32)
+
+    oneshot = Engine(params, cfg, ServeConfig(max_seq=64, prefill_mode="batched"))
+    cont = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=64,
+        page_size=16, max_batch=b, prefill_chunk=8,
+    ))
+    oneshot.generate(prompts, n_new)  # warmup/compile
+    cont.generate(prompts, n_new)
+    s_one = _time_once(lambda: oneshot.generate(prompts, n_new), passes)
+    s_cont = _time_once(lambda: cont.generate(prompts, n_new), passes)
+    tok = b * n_new
+    tps_one, tps_cont = tok / s_one, tok / s_cont
+    rows = [
+        {"impl": "serve_oneshot_batched", "us": round(s_one * 1e6, 1),
+         "tokens_per_s": round(tps_one, 1)},
+        {"impl": "serve_continuous", "us": round(s_cont * 1e6, 1),
+         "tokens_per_s": round(tps_cont, 1)},
+        # timing-derived, reported not gated (see module docstring)
+        {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
+        {"shape": [b, s0, n_new], "prefill_chunk": 8, "page_size": 16},
+    ]
+    return rows, round(tps_cont / tps_one, 3)

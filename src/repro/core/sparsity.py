@@ -31,10 +31,21 @@ class SparsityConfig:
     a_nnz_per_layer: Optional[Sequence[int]] = None  # variable A-DBB
     exclude_first_layer: bool = True  # paper Table 3 note 2
     serve_packed: bool = False
+    # int8-wire dynamic activation scale granularity: "per_tensor" (one
+    # scalar per call — cheapest, but couples co-batched requests and
+    # batched-vs-stepped prefill, see ROADMAP) or "per_row" (one scale
+    # per token — each token quantizes independently, which makes the
+    # integer-exact int8 path bit-identical across batch compositions;
+    # the continuous serving engine uses this mode)
+    act_scale: str = "per_tensor"
 
     def __post_init__(self):
         if self.mode not in ("dense", "wdbb", "awdbb"):
             raise ValueError(f"unknown sparsity mode {self.mode!r}")
+        if self.act_scale not in ("per_tensor", "per_row"):
+            raise ValueError(
+                f"unknown act_scale {self.act_scale!r}; per_tensor|per_row"
+            )
 
     @property
     def w_cfg(self) -> Optional[dbb.DBBConfig]:

@@ -300,12 +300,20 @@ def dbb_matmul_int8_pallas(
     tkb = tk // cfg.bz
     nk = k // tk
     grid = (m // tm, n // tn, nk)
+    # per-tensor x_scale folds to a [1, N] row streamed like the bias;
+    # per-row x_scale [M] folds to the full [M, N] dequant tile (the
+    # column-vector-operand cost of batch-invariant per-token scales)
     scale_row = ref.combined_scale(x_scale, w_scale, n)
+    scale_spec = (
+        pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j))
+        if scale_row.shape[0] == m and m > 1
+        else pl.BlockSpec((1, tn), lambda i, j, kk: (0, j))
+    )
     in_specs = [
         pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((tkb, nnz, tn), lambda i, j, kk: (kk, 0, j)),
         pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
-        pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        scale_spec,
     ]
     operands = [x_q, w_vals, w_mask, scale_row]
     if bias is not None:
@@ -365,12 +373,17 @@ def dbb_matmul_aw_int8_pallas(
     nk = k // tk
     grid = (m // tm, n // tn, nk)
     scale_row = ref.combined_scale(x_scale, w_scale, n)
+    scale_spec = (
+        pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j))
+        if scale_row.shape[0] == m and m > 1
+        else pl.BlockSpec((1, tn), lambda i, j, kk: (0, j))
+    )
     in_specs = [
         pl.BlockSpec((tm, tkb, nnz_a), lambda i, j, kk: (i, kk, 0)),
         pl.BlockSpec((tm, tkb), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((tkb, nnz_w, tn), lambda i, j, kk: (kk, 0, j)),
         pl.BlockSpec((tkb, tn), lambda i, j, kk: (kk, j)),
-        pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        scale_spec,
     ]
     operands = [x_vals, x_mask, w_vals, w_mask, scale_row]
     if bias is not None:

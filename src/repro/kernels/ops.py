@@ -112,18 +112,20 @@ def dbb_matmul_int8(
     bias: Optional[jax.Array] = None,
     act: Optional[str] = None,
     out_dtype=None,
+    act_scale: str = "per_tensor",
     **tile_kw,
 ) -> jax.Array:
     """Quantized W-DBB matmul (int8 wire, int32 accumulate, fused dequant).
 
-    ``x`` may be float (quantized here with a dynamic per-tensor scale)
-    or already int8 with ``x_scale`` supplied.  Weights come from
-    :func:`pack_weight_int8`.  Output is float (``out_dtype``, default:
-    the float input's dtype, else f32).
+    ``x`` may be float (quantized here with a dynamic scale —
+    ``act_scale`` selects per-tensor or per-row/per-token) or already
+    int8 with ``x_scale`` supplied (scalar, or ``[M]`` per row).
+    Weights come from :func:`pack_weight_int8`.  Output is float
+    (``out_dtype``, default: the float input's dtype, else f32).
     """
     if x.dtype != jnp.int8:
         out_dtype = out_dtype or x.dtype
-        x, x_scale = ref.quantize_act_int8(x)
+        x, x_scale = ref.quantize_act_int8(x, per_row=act_scale == "per_row")
     elif x_scale is None:
         raise ValueError("int8 x requires x_scale")
     out_dtype = out_dtype or jnp.float32
@@ -213,17 +215,22 @@ def dap_pack_int8(
     x: jax.Array,
     nnz: int,
     bz: int = dbb.DEFAULT_BZ,
+    act_scale: str = "per_tensor",
 ):
     """Fused DAP-prune + pack + quantize: dense ``[..., K]`` -> int8 wire.
 
     Returns ``(vals [..., K//BZ, NNZ] int8, mask [..., K//BZ] uint8,
-    scale f32 scalar)`` — one block-topk pass selects and packs
+    scale f32)`` — one block-topk pass selects and packs
     (:func:`dap_pack`), then the kept values quantize with a dynamic
-    per-tensor scale (the amax of the packed values equals the amax of
-    the DAP-pruned tensor, since Top-NNZ keeps each block's largest
-    magnitudes).  Producer side of :func:`dbb_matmul_aw_int8`.
+    scale (the amax of the packed values equals the amax of the
+    DAP-pruned tensor, since Top-NNZ keeps each block's largest
+    magnitudes).  ``act_scale="per_tensor"`` shares one scalar;
+    ``"per_row"`` gives one scale per token (shape ``x.shape[:-1]``) so
+    a token's quantization never depends on what it is batched with.
+    Producer side of :func:`dbb_matmul_aw_int8`.
     """
-    return dbb.pack_bitmask_int8(x, dbb.DBBConfig(nnz, bz))
+    scale_axis = (-2, -1) if act_scale == "per_row" else None
+    return dbb.pack_bitmask_int8(x, dbb.DBBConfig(nnz, bz), scale_axis=scale_axis)
 
 
 def expand_act(vals: jax.Array, mask: jax.Array, cfg: dbb.DBBConfig) -> jax.Array:

@@ -112,12 +112,19 @@ def dbb_matmul_aw_ref(
 
 
 def combined_scale(x_scale: jax.Array, w_scale: jax.Array, n: int) -> jax.Array:
-    """The dequant row ``[1, N] = x_scale * w_scale`` shared by kernels
-    and oracles — one definition so both sides multiply identically and
-    int8 parity stays bit-exact."""
-    return (
-        x_scale.astype(jnp.float32) * w_scale.astype(jnp.float32)
-    ).reshape(1, n)
+    """The dequant scale shared by kernels and oracles — one definition
+    so both sides multiply identically and int8 parity stays bit-exact.
+
+    Scalar ``x_scale`` (per-tensor dynamic activations) gives the
+    ``[1, N]`` row; per-row ``x_scale [M]`` (per-token dynamic
+    activations — the batch-invariant mode, see ``core.sparsity``) gives
+    the full ``[M, N]`` outer product — the "column-vector operand in
+    the dequant epilogue" cost of per-row scales."""
+    ws = w_scale.astype(jnp.float32).reshape(1, n)
+    xs = x_scale.astype(jnp.float32)
+    if xs.ndim == 0:
+        return (xs * ws).reshape(1, n)
+    return xs.reshape(-1, 1) * ws
 
 
 def dbb_matmul_int8_ref(
@@ -179,10 +186,15 @@ def pack_weight_int8(w: jax.Array, cfg: dbb.DBBConfig):
     return jnp.moveaxis(q, 0, -1), jnp.moveaxis(mask, 0, -1), scale
 
 
-def quantize_act_int8(x: jax.Array):
-    """Dense activations -> ``(int8 [..., K], f32 scalar scale)`` with a
-    per-tensor *dynamic* scale (recomputed per call — activations have
-    no stable range, unlike weights)."""
+def quantize_act_int8(x: jax.Array, per_row: bool = False):
+    """Dense activations -> ``(int8 [..., K], f32 scale)`` with a
+    *dynamic* scale (recomputed per call — activations have no stable
+    range, unlike weights).  ``per_row=False``: one per-tensor scalar;
+    ``per_row=True``: one scale per leading row (per token), shape
+    ``[...]`` — each row quantizes independently of what it is batched
+    with (see ``core.sparsity.SparsityConfig.act_scale``)."""
+    if per_row:
+        return quant.quantize(x, axis=-1)
     return quant.quantize(x)
 
 

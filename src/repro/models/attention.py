@@ -82,6 +82,74 @@ def fill_ring(cache_layer, new_k, new_v, s: int):
     }
 
 
+# ----------------------------------------------------------- paged KV cache
+#
+# Paged counterpart of the ring above (serve/paged_cache.py): per-layer
+# k/v live in fixed-size pages [N_pages, PS, D], a request's logical
+# position p maps to (page_table[p // PS], p % PS), and page 0 is the
+# null page — never allocated, pads every table, absorbs padding writes
+# with pos = -1 so gathers stay uniform and masking derives from the
+# position array exactly like the ring.
+
+NULL_PAGE = 0
+
+
+def _paged_flat_idx(positions, page_tables, page_size: int):
+    """[B, S] absolute positions (-1 = padding) -> flat page-pool indices.
+
+    Padding tokens are routed to (null page, slot 0); their pos writes
+    carry -1 (see paged_update_pos) so reads mask them.
+    """
+    valid = positions >= 0
+    p_safe = jnp.maximum(positions, 0)
+    logical = jnp.minimum(p_safe // page_size, page_tables.shape[1] - 1)
+    page = jnp.take_along_axis(page_tables, logical, axis=1)
+    page = jnp.where(valid, page, NULL_PAGE)
+    slot = jnp.where(valid, p_safe % page_size, 0)
+    return (page * page_size + slot).reshape(-1), valid
+
+
+def paged_update(cache_k, cache_v, new_k, new_v, positions, page_tables):
+    """Scatter a [B, S, D] chunk of new K/V into non-contiguous pages.
+
+    cache_k/v [N_pages, PS, D*]; positions [B, S]; page_tables [B, P].
+    Rows at different sequence positions write to different pages in the
+    same jitted step — the write half of continuous batching.
+    """
+    ps = cache_k.shape[1]
+    flat, _ = _paged_flat_idx(positions, page_tables, ps)
+    kf = cache_k.reshape(-1, cache_k.shape[-1])
+    vf = cache_v.reshape(-1, cache_v.shape[-1])
+    kf = kf.at[flat].set(new_k.reshape(-1, new_k.shape[-1]).astype(kf.dtype))
+    vf = vf.at[flat].set(new_v.reshape(-1, new_v.shape[-1]).astype(vf.dtype))
+    return kf.reshape(cache_k.shape), vf.reshape(cache_v.shape)
+
+
+def paged_update_pos(pos_tbl, positions, page_tables):
+    """Record the step's token positions in the shared [N_pages, PS] slot
+    table.  Padding writes land on the null page with -1, preserving the
+    "null page is always masked" invariant."""
+    ps = pos_tbl.shape[1]
+    flat, valid = _paged_flat_idx(positions, page_tables, ps)
+    vals = jnp.where(valid, positions, -1).reshape(-1).astype(jnp.int32)
+    return pos_tbl.reshape(-1).at[flat].set(vals).reshape(pos_tbl.shape)
+
+
+def paged_read(cache_k, cache_v, pos_tbl, page_tables):
+    """Gather each request's pages into a contiguous logical window.
+
+    Returns (k [B, P*PS, Dk], v [B, P*PS, Dv], pos [B, P*PS]) — the same
+    (values, slot-positions) interface the ring presents, so `mha`'s
+    position-derived masking needs no paged special case.
+    """
+    b, p = page_tables.shape
+    ps = cache_k.shape[1]
+    k_win = cache_k[page_tables].reshape(b, p * ps, cache_k.shape[-1])
+    v_win = cache_v[page_tables].reshape(b, p * ps, cache_v.shape[-1])
+    pos_win = pos_tbl[page_tables].reshape(b, p * ps)
+    return k_win, v_win, pos_win
+
+
 # ------------------------------------------------------------ core attention
 
 
@@ -269,6 +337,7 @@ def gqa_forward(
     decode_pos: Optional[jax.Array] = None,  # scalar step for decode
     rope_cs=None,  # optional precomputed (cos, sin) (M-RoPE)
     causal: bool = True,
+    page_tables: Optional[jax.Array] = None,  # [B, P] -> paged cache mode
 ):
     b, s, d = x.shape
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim()
@@ -285,6 +354,31 @@ def gqa_forward(
         cos, sin = rope_cs
     q = rope.apply_rope(q, cos, sin)
     k = rope.apply_rope(k, cos, sin)
+
+    if page_tables is not None:
+        # Paged cache: per-ROW positions (requests at different sequence
+        # offsets share one step), write-then-gather over non-contiguous
+        # pages.  cache_layer["pos"] must already hold this step's
+        # positions (lm.paged_step writes the shared table once, before
+        # the layer scan).
+        new_k_p, new_v_p = paged_update(
+            cache_layer["k"], cache_layer["v"],
+            k.reshape(b, s, kvh * dh), v.reshape(b, s, kvh * dh),
+            positions, page_tables,
+        )
+        k_win, v_win, pos_win = paged_read(
+            new_k_p, new_v_p, cache_layer["pos"], page_tables
+        )
+        t = k_win.shape[1]
+        out = mha(
+            q,
+            k_win.reshape(b, t, kvh, dh),
+            v_win.reshape(b, t, kvh, dh),
+            positions, pos_win,
+            window=cfg.sliding_window, chunk=None,
+        )
+        y = linear(p["wo"], out.reshape(b, s, h * dh), sparsity=sp, layer_idx=li)
+        return y, {"k": new_k_p, "v": new_v_p}
 
     if cache_layer is not None and decode_pos is None:
         # Single-pass prefill: full-sequence attention over the fresh K/V
@@ -375,6 +469,44 @@ def make_mla(key, cfg, dtype):
     return params, specs
 
 
+def _mla_absorbed(q_nope, q_rope, lat, q_pos, k_pos, w_kv_up, m, scale, out_dtype):
+    """Absorbed-form MLA attention over a latent window.
+
+    ``lat [B, T, lora+rope]`` is the (c_kv ‖ k_rope) latent — from the
+    ring or gathered from pages — with slot positions ``k_pos [B, T]``.
+    q is absorbed through kv_up per head, so the latent cache is never
+    expanded.  bf16 operands with f32 accumulation — never materializes
+    an f32 copy of the latent cache (that would double decode HBM
+    traffic).  Returns [B, S, H, dv].
+    """
+    lora = m.kv_lora_rank
+    qk_nope = m.qk_nope_head_dim
+    c_all = lat[..., :lora]
+    kr_all = lat[..., lora:]
+    wk = w_kv_up[..., :qk_nope]  # [lora, H, nope]
+    q_abs = jnp.einsum(
+        "bshn,lhn->bshl", q_nope, wk.astype(q_nope.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_abs, c_all,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshr,btr->bhst", q_rope, kr_all,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    bias = _mask_bias(q_pos, k_pos, None)[:, None, :, :]
+    probs = jax.nn.softmax(logits + bias, axis=-1)
+    ctx = jnp.einsum(
+        "bhst,btl->bshl", probs.astype(c_all.dtype), c_all,
+        preferred_element_type=jnp.float32,
+    )
+    wv = w_kv_up[..., qk_nope:]  # [lora, H, dv]
+    return jnp.einsum(
+        "bshl,lhv->bshv", ctx.astype(out_dtype), wv.astype(out_dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
 def mla_forward(
     p,
     x: jax.Array,
@@ -384,6 +516,7 @@ def mla_forward(
     layer_idx=None,
     cache_layer=None,
     decode_pos=None,
+    page_tables: Optional[jax.Array] = None,
 ):
     """MLA.  Cache stores the *latent* (c_kv ‖ k_rope) — the paper-faithful
     MLA memory win.  Prefill/train materializes per-head K/V; decode uses
@@ -411,6 +544,26 @@ def mla_forward(
 
     w_kv_up = p["kv_up"]["w"].reshape(m.kv_lora_rank, h, qk_nope + dv)
 
+    if page_tables is not None:
+        # Paged latent cache: write (c_kv ‖ k_rope) into this step's page
+        # slots, gather each row's logical window, attend absorbed — the
+        # same math stepped decode runs, but with per-row positions over
+        # non-contiguous pages (v pages are the ring's 1-wide dummy).
+        latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+        new_k_p, new_v_p = paged_update(
+            cache_layer["k"], cache_layer["v"],
+            latent, jnp.zeros((b, s, 1), latent.dtype),
+            positions, page_tables,
+        )
+        lat, _, pos_win = paged_read(
+            new_k_p, new_v_p, cache_layer["pos"], page_tables
+        )
+        out = _mla_absorbed(
+            q_nope, q_rope, lat, positions, pos_win, w_kv_up, m, scale, x.dtype
+        )
+        y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)
+        return y, {"k": new_k_p, "v": new_v_p}
+
     if cache_layer is not None and decode_pos is None:
         # Single-pass prefill: materialized attention (below) + latent
         # ring fill in the same trace — the cache stores (c_kv ‖ k_rope),
@@ -429,34 +582,11 @@ def mla_forward(
         new_cache = _update_ring(
             cache_layer, latent, jnp.zeros((b, s, 1), latent.dtype), decode_pos, window
         )
-        lat = new_cache["k"]
-        c_all = lat[..., : m.kv_lora_rank]
-        kr_all = lat[..., m.kv_lora_rank :]
-        # absorbed scores: q_nope' = q_nope @ Wk per head -> [B,S,H,lora].
-        # bf16 operands with f32 accumulation — never materializes an f32
-        # copy of the latent cache (that would double decode HBM traffic).
-        wk = w_kv_up[..., :qk_nope]  # [lora, H, nope]
-        q_abs = jnp.einsum(
-            "bshn,lhn->bshl", q_nope, wk.astype(q_nope.dtype),
-            preferred_element_type=jnp.float32,
-        ).astype(x.dtype)
-        logits = (
-            jnp.einsum("bshl,btl->bhst", q_abs, c_all,
-                       preferred_element_type=jnp.float32)
-            + jnp.einsum("bshr,btr->bhst", q_rope, kr_all,
-                         preferred_element_type=jnp.float32)
-        ) * scale
-        bias = _mask_bias(positions, new_cache["pos"], None)[:, None, :, :]
-        probs = jax.nn.softmax(logits + bias, axis=-1)
-        ctx = jnp.einsum(
-            "bhst,btl->bshl", probs.astype(c_all.dtype), c_all,
-            preferred_element_type=jnp.float32,
+        # absorbed scores over the ring window (shared with the paged path)
+        out = _mla_absorbed(
+            q_nope, q_rope, new_cache["k"], positions, new_cache["pos"],
+            w_kv_up, m, scale, x.dtype,
         )
-        wv = w_kv_up[..., qk_nope:]  # [lora, H, dv]
-        out = jnp.einsum(
-            "bshl,lhv->bshv", ctx.astype(x.dtype), wv.astype(x.dtype),
-            preferred_element_type=jnp.float32,
-        ).astype(x.dtype)
         y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)
         return y, new_cache
 

@@ -52,16 +52,22 @@ def decoder_block(
     cache_layer=None,
     decode_pos=None,
     rope_cs=None,
+    page_tables=None,
 ):
     """Pre-norm decoder block.  Works for dense/GQA, MLA, MoE, hybrid.
 
     cache_layer: attention ring-buffer dict, and for hybrid additionally
-    {"ssm_state", "ssm_conv"} merged in the same dict.
+    {"ssm_state", "ssm_conv"} merged in the same dict.  With
+    ``page_tables`` set, cache_layer holds this layer's *paged* k/v pools
+    plus the already-updated shared slot-position table (lm.paged_step) —
+    requests at per-row ``positions`` over non-contiguous pages.
     """
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     # cache_layer with decode_pos=None means single-pass prefill: the
     # attention layer fills its own ring in-trace (attention.fill_ring)
-    prefill_fill = cache_layer is not None and decode_pos is None
+    prefill_fill = (
+        cache_layer is not None and decode_pos is None and page_tables is None
+    )
     attn_cache = None
     if cache_layer is not None:
         attn_cache = {k: cache_layer[k] for k in ("k", "v", "pos")}
@@ -69,12 +75,13 @@ def decoder_block(
         a_out, new_attn_cache = attn.mla_forward(
             p["attn"], h, cfg, positions,
             layer_idx=layer_idx, cache_layer=attn_cache, decode_pos=decode_pos,
+            page_tables=page_tables,
         )
     else:
         a_out, new_attn_cache = attn.gqa_forward(
             p["attn"], h, cfg, positions,
             layer_idx=layer_idx, cache_layer=attn_cache,
-            decode_pos=decode_pos, rope_cs=rope_cs,
+            decode_pos=decode_pos, rope_cs=rope_cs, page_tables=page_tables,
         )
 
     new_cache = None

@@ -107,8 +107,10 @@ class PackedAct:
     forward pass and never crosses a jit boundary.
 
     Under the int8 wire (``wire_dtype="int8"`` serving) ``vals`` is int8
-    and ``scale`` holds the dynamic per-tensor dequant scale; ``dtype``
-    still names the dense *compute* dtype outputs are produced in.
+    and ``scale`` holds the dynamic dequant scale — a scalar
+    (per-tensor) or one scale per token (``SparsityConfig.act_scale ==
+    "per_row"``, shape = the leading dims); ``dtype`` still names the
+    dense *compute* dtype outputs are produced in.
     """
 
     vals: jax.Array  # [..., K//BZ, NNZ] (model dtype, or int8 wire)
@@ -116,7 +118,7 @@ class PackedAct:
     cfg: dbb.DBBConfig
     k: int  # dense extent of the packed axis
     dtype: jnp.dtype  # dense dtype (outputs keep it)
-    scale: Optional[jax.Array] = None  # f32 scalar; set iff vals is int8
+    scale: Optional[jax.Array] = None  # f32, scalar or per-row; iff int8
 
 
 ActOrPacked = Union[jax.Array, PackedAct]
@@ -162,7 +164,10 @@ def maybe_pack_input(
     if spec is None:
         return x
     if all("w_scale" in t for t in targets):  # int8 wire end to end
-        vals, mask, scale = ops.dap_pack_int8(x, spec.nnz, spec.bz)
+        vals, mask, scale = ops.dap_pack_int8(
+            x, spec.nnz, spec.bz,
+            act_scale=sparsity.act_scale if sparsity else "per_tensor",
+        )
         return PackedAct(vals, mask, spec.cfg, x.shape[-1], x.dtype, scale)
     vals, mask = ops.dap_pack(x, spec.nnz, spec.bz)
     return PackedAct(vals, mask, spec.cfg, x.shape[-1], x.dtype)
@@ -224,13 +229,16 @@ def linear(
             vals2 = x.vals.reshape((-1,) + x.vals.shape[-2:])
             mask2 = x.mask.reshape((-1,) + x.mask.shape[-1:])
             if "w_scale" in p:  # int8 wire on both operands
-                vals2, x_scale = (
-                    (vals2, x.scale)
-                    if x.scale is not None
+                if x.scale is not None:
+                    # per-row scales carry one value per token: flatten
+                    # the lead dims alongside the values
+                    x_scale = (
+                        x.scale if x.scale.ndim == 0 else x.scale.reshape(-1)
+                    )
+                else:
                     # bf16-packed input meets int8 weights (mixed targets):
                     # quantize the packed values in place, per-tensor
-                    else quant.quantize(vals2)
-                )
+                    vals2, x_scale = quant.quantize(vals2)
                 y2 = ops.dbb_matmul_aw_int8(
                     vals2, mask2, x_scale,
                     p["w_vals"], p["w_mask"], p["w_scale"],
@@ -250,7 +258,8 @@ def linear(
         # already pruned.
         vals = x.vals
         if x.scale is not None:
-            vals = quant.dequantize(vals, x.scale, dtype=x.dtype)
+            axis = None if x.scale.ndim == 0 else (-2, -1)
+            vals = quant.dequantize(vals, x.scale, axis=axis, dtype=x.dtype)
         x = ops.expand_act(vals, x.mask, x.cfg)
     elif dap_input:
         spec = _active_dap_spec(sp, x, layer_idx, first_layer)
@@ -261,10 +270,11 @@ def linear(
         cfg = dbb.DBBConfig(sp.w_nnz, sp.bz) if sp else dbb.DBBConfig(4, 8)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        if "w_scale" in p:  # int8 wire: dynamic per-tensor act quant
+        if "w_scale" in p:  # int8 wire: dynamic act quant (sp.act_scale)
             y2 = ops.dbb_matmul_int8(
                 x2, p["w_vals"], p["w_mask"], p["w_scale"], cfg,
                 impl="jnp", bias=p.get("b"), act=act, out_dtype=x.dtype,
+                act_scale=sp.act_scale if sp else "per_tensor",
             )
         else:
             y2 = ops.dbb_matmul(

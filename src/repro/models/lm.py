@@ -257,6 +257,71 @@ def decode_step(params, cache, tokens: jax.Array, pos, cfg):
     return logits, new_cache
 
 
+def paged_step(params, cache, tokens, positions, page_tables, cfg,
+               scrub_pages=None):
+    """One continuous-batching step over the paged KV cache.
+
+    ``tokens/positions [B, S]`` carry a *mixed* batch: each row is an
+    independent request at its own absolute positions — a chunked-prefill
+    slice, a single decode token, or padding (position -1).  ``cache`` is
+    a paged cache (serve/paged_cache.make_paged_cache): per-layer k/v
+    page pools plus one shared slot-position table; ``page_tables
+    [B, P]`` maps each row's logical positions onto its pages (padded
+    with the null page).  One jitted call serves every row regardless of
+    sequence position or physical page placement — the compute half of
+    continuous batching (serve/scheduler.py drives it).
+
+    ``scrub_pages`` (fixed-width int32, null-page-padded) lists pages
+    freshly allocated this step: their slot positions are invalidated
+    before anything else, so a page recycled from a finished request
+    can never leak stale entries that alias the new owner's logical
+    positions (scrubbing the null page is a harmless no-op).
+
+    Returns (logits [B, S, V], new_cache).  Rows are masked per-position
+    (k_pos <= q_pos over gathered slot positions), so padding emits
+    garbage logits that callers must not sample from (the scheduler
+    samples only at each row's last valid index).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged_step unsupported for recurrent family {cfg.family!r}: "
+            "only attention state pages (see serve/scheduler.py)"
+        )
+    from repro.models import attention
+
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg)
+    pos3 = None
+    if cfg.m_rope_sections is not None:
+        pos3 = jnp.broadcast_to(positions[None], (3, b, s))
+    rope_cs = None
+    if cfg.mla is None:
+        rope_cs = _rope_cs(cfg, positions, pos3)
+
+    # One shared slot-position write for the whole stack (every layer
+    # stores the same token positions); layers read the updated table so
+    # this step's tokens are visible to intra-chunk causal attention.
+    pos_tbl = cache["pos"]
+    if scrub_pages is not None:
+        pos_tbl = pos_tbl.at[scrub_pages].set(-1)
+    new_pos_tbl = attention.paged_update_pos(pos_tbl, positions, page_tables)
+
+    def body(carry, inp):
+        layer_p, kv = inp
+        y, new_c, _ = blocks.decoder_block(
+            layer_p, carry, cfg, positions,
+            cache_layer={"k": kv["k"], "v": kv["v"], "pos": new_pos_tbl},
+            page_tables=page_tables, rope_cs=rope_cs,
+        )
+        return y, new_c
+
+    x, new_kv = scan_over_layers(
+        body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}), cfg
+    )
+    logits = _head(params, x, cfg)
+    return logits, {"k": new_kv["k"], "v": new_kv["v"], "pos": new_pos_tbl}
+
+
 def prefill(params, tokens, cfg, cache=None):
     """Prefill: forward pass; if ``cache`` given, also fills it and returns
     (logits, cache) — logits only otherwise.

@@ -15,6 +15,13 @@ actual INT8 datapath: weights quantize to int8 wire at engine build
 (per-channel scales) and the packed activation hand-off runs int8 with
 the dequant fused into the matmul epilogues.
 
+``prefill_mode="continuous"`` replaces the lock-step loop entirely:
+iteration-level continuous batching over a paged KV cache
+(serve/scheduler.py + serve/paged_cache.py) — chunked prefill
+interleaved with in-flight decodes, staggered arrivals, mixed prompt
+lengths, per-request page tables — with byte-identical tokens per
+request vs the stepped path (docs/serving.md).
+
 SSM and hybrid families keep the stepped prefill: their recurrent state
 has no exact one-shot cache fill in ``lm.prefill`` (the chunked scan
 drops the final state), and serving correctness beats speed there.
@@ -23,7 +30,7 @@ drops the final state), and serving correctness beats speed there.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +38,81 @@ import numpy as np
 
 from repro.core import dbb
 from repro.models import common, encdec, lm
+from repro.serve import paged_cache
+from repro.serve.scheduler import Request, Scheduler
 
 # Families whose cache lm.prefill fills exactly (pure attention caches).
+# The continuous/paged path shares this set: both need attention-only
+# state (recurrent SSM/hybrid state has no paged equivalent yet).
 BATCHED_PREFILL_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Serving knobs.
+
+    ``prefill_mode`` selects how prompts reach the cache:
+
+    * ``"auto"`` — ``"batched"`` for pure-attention families
+      (:data:`BATCHED_PREFILL_FAMILIES`), ``"stepped"`` otherwise.
+    * ``"batched"`` — whole prompt in one jitted ``lm.prefill`` call,
+      then lock-step decode over the ring cache (one-shot path; kept as
+      the parity/throughput baseline for the continuous scheduler).
+    * ``"stepped"`` — per-token prefill through ``lm.decode_step`` (exact
+      for recurrent state; the reference the parity suite decodes
+      against).
+    * ``"continuous"`` — iteration-level continuous batching over the
+      paged KV cache (serve/scheduler.py): chunked prefill interleaved
+      with in-flight decodes, per-request page tables, iteration-level
+      admission.  Supports staggered arrivals and mixed prompt lengths
+      via :meth:`Engine.generate_requests`; attention families only.
+
+    ``page_size``/``max_pages``/``max_batch``/``prefill_chunk`` shape the
+    paged cache and scheduler (continuous mode only).  ``max_pages``
+    defaults to ``max_batch`` full-length requests plus the null page.
+    """
+
     max_seq: int = 512
     temperature: float = 0.0  # 0 = greedy
     pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
     wire_dtype: str = "native"  # native | int8 (paper's int8 datapath)
-    prefill_mode: str = "auto"  # auto | batched | stepped
+    prefill_mode: str = "auto"  # auto | batched | stepped | continuous
+    # --- continuous batching / paged KV (prefill_mode="continuous") ---
+    page_size: int = 16  # tokens per KV page
+    max_pages: Optional[int] = None  # page-pool size incl. the null page
+    max_batch: int = 4  # concurrent requests per jitted step
+    prefill_chunk: int = 8  # max prompt tokens a request feeds per step
+
+    def __post_init__(self):
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}"
+            )
+        if self.max_pages is not None:
+            need = self.pages_per_request + 1
+            if self.max_pages < need:
+                raise ValueError(
+                    f"max_pages={self.max_pages} cannot hold one "
+                    f"max_seq={self.max_seq} request: need >= "
+                    f"{self.pages_per_request} data pages + 1 null page "
+                    f"at page_size={self.page_size} (= {need} total)"
+                )
+
+    @property
+    def pages_per_request(self) -> int:
+        return paged_cache.pages_for(self.max_seq, self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        if self.max_pages is not None:
+            return self.max_pages
+        return self.max_batch * self.pages_per_request + 1
 
 
 def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
@@ -104,10 +174,37 @@ class Engine:
         self._sample = jax.jit(
             lambda logits: jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
         )
+        # continuous mode: one mixed paged step + per-row sampling at each
+        # row's own last valid chunk index.  Under the int8 wire the step
+        # quantizes activations with PER-ROW (per-token) dynamic scales:
+        # the int8 datapath is integer-exact (int32 accumulate,
+        # elementwise dequant), so per-token scales make every request's
+        # tokens bit-identical to its solo stepped run regardless of what
+        # it is co-batched with — the parity suite's exactness guarantee.
+        # (The one-shot batched wire keeps per-tensor scales and its
+        # documented batch-invariance violation — see ROADMAP.)
+        cfg_step = cfg
+        if scfg.wire_dtype == "int8":
+            cfg_step = dataclasses.replace(
+                cfg, sparsity=dataclasses.replace(
+                    cfg.sparsity, act_scale="per_row"
+                )
+            )
+        self._paged_step = jax.jit(
+            lambda p, c, t, pos, tbl, scrub: lm.paged_step(
+                p, c, t, pos, tbl, cfg_step, scrub_pages=scrub
+            )
+        )
+        self._sample_at = jax.jit(
+            lambda logits, idx: jnp.argmax(
+                logits[jnp.arange(logits.shape[0]), idx, :v], axis=-1
+            ).astype(jnp.int32)
+        )
         # dispatch instrumentation (see tests/test_serve.py): python-level
-        # calls into the jitted prefill/decode functions
+        # calls into the jitted prefill/decode/paged-step functions
         self.prefill_calls = 0
         self.decode_calls = 0
+        self.step_calls = 0
 
     def _resolve_prefill_mode(self) -> str:
         mode = self.scfg.prefill_mode
@@ -117,14 +214,18 @@ class Engine:
                 if self.cfg.family in BATCHED_PREFILL_FAMILIES
                 else "stepped"
             )
-        if mode not in ("batched", "stepped"):
+        if mode not in ("batched", "stepped", "continuous"):
             raise ValueError(
-                f"unknown prefill_mode {mode!r}; one of auto|batched|stepped"
+                f"unknown prefill_mode {mode!r}; one of "
+                "auto|batched|stepped|continuous"
             )
-        if mode == "batched" and self.cfg.family not in BATCHED_PREFILL_FAMILIES:
+        if (
+            mode in ("batched", "continuous")
+            and self.cfg.family not in BATCHED_PREFILL_FAMILIES
+        ):
             raise ValueError(
-                f"prefill_mode='batched' unsupported for family "
-                f"{self.cfg.family!r}: lm.prefill cannot fill recurrent "
+                f"prefill_mode={mode!r} unsupported for family "
+                f"{self.cfg.family!r}: lm cannot fill recurrent "
                 f"state exactly (use 'auto' or 'stepped')"
             )
         return mode
@@ -151,9 +252,15 @@ class Engine:
         """prompts [B, S0] int32 -> tokens [B, S0 + n_tokens]."""
         cfg = self.cfg
         b, s0 = prompts.shape
+        mode = self._resolve_prefill_mode()
+        if mode == "continuous":
+            outs = self.generate_requests(
+                [prompts[i] for i in range(b)], n_tokens
+            )
+            return np.stack(outs)
         cache = lm.make_cache(cfg, b, self.scfg.max_seq)
         toks = jnp.asarray(prompts)
-        if self._resolve_prefill_mode() == "batched":
+        if mode == "batched":
             logits, cache = self._prefill_batched(toks, cache)
         else:
             logits, cache = self._prefill_stepped(toks, cache)
@@ -167,3 +274,83 @@ class Engine:
             )
             cur = self._sample(logits)
         return np.asarray(jnp.concatenate(out, axis=1))
+
+    # --------------------------------------------- continuous batching
+
+    def generate_requests(
+        self,
+        prompts: Sequence[np.ndarray],
+        n_tokens,
+        arrivals: Optional[Sequence[int]] = None,
+    ) -> List[np.ndarray]:
+        """Continuous-batched generation over the paged KV cache.
+
+        ``prompts`` may have **mixed lengths**; ``n_tokens`` is one int or
+        a per-request sequence; ``arrivals`` (scheduler iterations, default
+        all 0) staggers request visibility — a request admits only once
+        its arrival iteration has passed and a batch row plus enough KV
+        pages for its lifetime are available.  Every iteration runs ONE
+        jitted ``lm.paged_step`` over the mixed batch (chunked prefills +
+        in-flight decodes at per-row positions over non-contiguous
+        pages).  Returns ``prompt ‖ generated`` per request, in input
+        order — byte-identical per request to the stepped engine (the
+        parity suite enforces this).
+        """
+        scfg = self.scfg
+        n = len(prompts)
+        n_list = [n_tokens] * n if isinstance(n_tokens, int) else list(n_tokens)
+        arr_list = [0] * n if arrivals is None else list(arrivals)
+        if len(n_list) != n:
+            raise ValueError(
+                f"n_tokens has {len(n_list)} entries for {n} prompts"
+            )
+        if len(arr_list) != n:
+            raise ValueError(
+                f"arrivals has {len(arr_list)} entries for {n} prompts"
+            )
+        reqs = []
+        for i, prompt in enumerate(prompts):
+            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            if prompt.shape[0] < 1:
+                raise ValueError(f"request {i}: empty prompt")
+            if n_list[i] < 1:
+                raise ValueError(f"request {i}: n_tokens must be >= 1")
+            total = prompt.shape[0] + n_list[i] - 1
+            if total > scfg.max_seq:
+                raise ValueError(
+                    f"request {i}: prompt {prompt.shape[0]} + {n_list[i]} "
+                    f"new tokens needs {total} cache positions, "
+                    f"max_seq={scfg.max_seq}"
+                )
+            reqs.append(
+                Request(
+                    rid=i, prompt=prompt, max_new_tokens=n_list[i],
+                    arrival=arr_list[i],
+                )
+            )
+        sched = Scheduler(
+            max_batch=scfg.max_batch,
+            page_size=scfg.page_size,
+            n_pages=scfg.total_pages,
+            max_pages_per_req=scfg.pages_per_request,
+            prefill_chunk=scfg.prefill_chunk,
+        )
+        for req in reqs:
+            sched.add(req)
+        cache = paged_cache.make_paged_cache(
+            self.cfg, scfg.total_pages, scfg.page_size
+        )
+        while sched.has_work():
+            plan = sched.plan()
+            if plan is None:  # only future arrivals left: advance time
+                sched.tick()
+                continue
+            self.step_calls += 1
+            logits, cache = self._paged_step(
+                self.params, cache,
+                jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
+                jnp.asarray(plan.page_tables), jnp.asarray(plan.scrub_pages),
+            )
+            sampled = self._sample_at(logits, jnp.asarray(plan.sample_idx))
+            sched.commit(plan, np.asarray(sampled))
+        return [req.tokens() for req in reqs]

@@ -1,0 +1,160 @@
+"""Paged KV cache: fixed-size pages, a host-side free-list allocator, and
+per-request page tables.
+
+The physical cache is a pool of ``n_pages`` fixed-size pages per layer
+(``k/v [L, n_pages, page_size, D]``) plus one *shared* slot-position table
+``pos [n_pages, page_size]`` (all layers write the same token positions,
+so one table serves the whole stack).  A request's logical KV stream maps
+onto physical storage through its **page table** — an ordered list of
+page ids where logical position ``p`` lives at
+``(table[p // page_size], p % page_size)`` — so requests at different
+sequence positions can share one jitted step over non-contiguous memory
+(vLLM-style paged attention; see PAPERS.md).
+
+Page ``0`` is the **null page**: it is never handed out by the
+allocator, page tables are padded with it, and the jitted scatter routes
+all padding-token writes to its slot 0 with ``pos = -1`` — so gathers
+through any (padded) page table are uniform and masking falls out of the
+position array, exactly like the ring cache (``models/attention.py``).
+
+The allocator is deliberately host-side pure Python: page management is
+control flow (admission, growth, release), not math — it runs between
+jitted steps and only its *outputs* (padded int32 page tables) cross the
+jit boundary.  Aliasing/leak freedom is property-tested in
+``tests/test_paged_cache.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+# Page 0 is reserved: never allocated, pads every page table, absorbs
+# padding-token writes (its pos entries stay -1 so reads mask them).
+# Single definition lives next to the jitted scatter/gather that
+# interprets it — allocator and kernels can never disagree.
+from repro.models.attention import NULL_PAGE  # noqa: E402,F401
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` logical slots."""
+    return max(0, -(-n_tokens // page_size))
+
+
+class PageAllocator:
+    """Free-list page allocator with per-request page tables.
+
+    Invariants (fuzz-tested):
+      * a page belongs to at most one live request (no aliasing),
+      * ``free ∪ allocated == {1 .. n_pages-1}`` at all times (no leaks),
+      * :data:`NULL_PAGE` is never allocated,
+      * ``slot_of`` reconstructs each request's logical stream exactly.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if n_pages < 2:
+            raise ValueError(
+                f"n_pages must be >= 2 (1 data page + the null page), "
+                f"got {n_pages}"
+            )
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list ordered so .pop() hands out low ids first — makes
+        # allocation order deterministic and easy to reason about in tests
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def live(self) -> Tuple[int, ...]:
+        return tuple(self._tables)
+
+    def page_table(self, rid) -> Tuple[int, ...]:
+        return tuple(self._tables[rid])
+
+    def n_slots(self, rid) -> int:
+        """Logical capacity currently backed by pages."""
+        return len(self._tables[rid]) * self.page_size
+
+    def slot_of(self, rid, pos: int) -> Tuple[int, int]:
+        """Physical (page_id, slot) of logical position ``pos``."""
+        if pos < 0:
+            raise ValueError(f"negative position {pos}")
+        table = self._tables[rid]
+        idx = pos // self.page_size
+        if idx >= len(table):
+            raise ValueError(
+                f"position {pos} not backed: request {rid!r} holds "
+                f"{len(table)} page(s) of {self.page_size}"
+            )
+        return table[idx], pos % self.page_size
+
+    # ----------------------------------------------------------- mutations
+
+    def alloc(self, rid) -> None:
+        """Register a request with an empty page table."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid!r} already allocated")
+        self._tables[rid] = []
+
+    def ensure(self, rid, n_tokens: int) -> List[int]:
+        """Grow ``rid``'s table to back ``n_tokens`` logical slots.
+
+        Returns the newly allocated page ids (possibly empty).  Raises
+        ``ValueError`` without side effects when the pool cannot satisfy
+        the growth — callers gate admission so this never fires mid-flight
+        (see serve/scheduler.py).
+        """
+        table = self._tables[rid]
+        need = pages_for(n_tokens, self.page_size) - len(table)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise ValueError(
+                f"out of KV pages: request {rid!r} needs {need} more, "
+                f"{len(self._free)} free (pool {self.n_pages}, "
+                f"page_size {self.page_size})"
+            )
+        new = [self._free.pop() for _ in range(need)]
+        table.extend(new)
+        return new
+
+    def free(self, rid) -> None:
+        """Release every page of ``rid`` back to the pool."""
+        pages = self._tables.pop(rid)
+        # re-add in reverse so freshly freed low ids are handed out first
+        self._free.extend(reversed(pages))
+
+
+# -------------------------------------------------------------- cache state
+
+
+def make_paged_cache(cfg, n_pages: int, page_size: int):
+    """Paged cache tensors for ``cfg`` (attention families only).
+
+    Layout mirrors :func:`repro.models.lm.make_cache` with the ``[B, W]``
+    window replaced by ``[n_pages, page_size]`` pages; ``pos`` is shared
+    across layers (one write per step instead of L).
+    """
+    from repro.models.common import dtype_of
+
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged KV cache unsupported for recurrent family "
+            f"{cfg.family!r}: only attention ring state pages"
+        )
+    dtype = dtype_of(cfg.dtype)
+    kv_dim = cfg.kv_dim()
+    v_dim = 1 if cfg.mla is not None else kv_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, n_pages, page_size, kv_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, n_pages, page_size, v_dim), dtype),
+        "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }

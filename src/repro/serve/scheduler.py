@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler: iteration-level admission over a paged
+KV cache, chunked-prefill interleaved with in-flight decodes.
+
+Orca-style iteration-level scheduling (PAPERS.md): instead of one
+batched-prefill call per prompt batch followed by lock-step decode, every
+scheduler iteration builds a *mixed* step — each active request
+contributes either a chunk of its prompt (up to ``prefill_chunk`` tokens)
+or one decode token, all at their own sequence positions — and hands it
+to one jitted ``lm.paged_step`` call.  A long prompt therefore never
+stalls co-batched decodes: it streams through in chunks while decode rows
+keep emitting a token per iteration, which is exactly the
+high-utilization mixed batch the S2TA joint A/W-DBB datapath wants.
+
+Memory is managed by the page allocator (serve/paged_cache.py): requests
+are **admitted** only when the pool can cover their full lifetime
+(prompt + max_new_tokens), accounting for the outstanding growth of
+already-running requests — so on-demand ``ensure`` growth during decode
+can never fail mid-flight (no preemption needed), while pages are still
+allocated incrementally as positions are written.
+
+Token-stream contract (mirrors the stepped engine exactly):
+  * prompt positions ``0..s0-1`` are written during (chunked) prefill;
+    the chunk containing position ``s0-1`` samples the first output token,
+  * decode feeds generated token ``g_i`` at position ``s0+i`` and samples
+    ``g_{i+1}``; a request finishes after ``max_new_tokens`` samples.
+The parity suite (tests/test_serve.py) asserts byte-identical tokens per
+request against the stepped path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.paged_cache import NULL_PAGE, PageAllocator, pages_for
+
+WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (host-side bookkeeping only)."""
+
+    rid: int
+    prompt: np.ndarray  # [S0] int32
+    max_new_tokens: int
+    arrival: int = 0  # scheduler iteration at which the request appears
+    # -- runtime state --
+    computed: int = 0  # cache positions written so far (prompt + fed decodes)
+    out: List[int] = dataclasses.field(default_factory=list)
+    state: str = WAITING
+    slot: Optional[int] = None  # batch row while RUNNING
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_positions(self) -> int:
+        """Cache slots the request writes over its whole lifetime: the
+        prompt plus every fed decode token (the last sampled token is
+        never fed back)."""
+        return self.prompt_len + max(0, self.max_new_tokens - 1)
+
+    def tokens(self) -> np.ndarray:
+        """prompt ‖ generated — the stepped engine's output layout."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out, np.int32)]
+        ).astype(np.int32)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Device-ready arrays for one mixed iteration (fixed shapes)."""
+
+    tokens: np.ndarray  # [B, C] int32 (0-padded)
+    positions: np.ndarray  # [B, C] int32, -1 = padding
+    page_tables: np.ndarray  # [B, P] int32, NULL_PAGE-padded
+    sample_idx: np.ndarray  # [B] int32: row's last valid chunk index
+    sample_mask: np.ndarray  # [B] bool: row emits a token this step
+    rows: List[Optional[Request]]  # per-row request (None = idle)
+    n_new: List[int]  # per-row positions written this step
+    # pages freshly allocated this step (fixed width, NULL_PAGE-padded):
+    # their slot positions must be scrubbed before the step's writes so a
+    # recycled page never leaks a previous owner's stale entries
+    scrub_pages: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int32)
+    )
+
+
+class Scheduler:
+    """Iteration-level scheduler over ``max_batch`` device rows."""
+
+    def __init__(
+        self,
+        *,
+        max_batch: int,
+        page_size: int,
+        n_pages: int,
+        max_pages_per_req: int,
+        prefill_chunk: int,
+    ):
+        self.allocator = PageAllocator(n_pages, page_size)
+        self.max_batch = max_batch
+        self.max_pages_per_req = max_pages_per_req
+        self.prefill_chunk = prefill_chunk
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.iteration = 0
+        # pages committed to live requests but not yet allocated — the
+        # admission guard that keeps on-demand growth failure-free
+        self._committed = 0
+        # fixed scrub width: a row writing n <= prefill_chunk positions
+        # can cross at most pages_for(n) + 1 page boundaries, so this
+        # bounds fresh allocations per step for every trace shape
+        self.scrub_width = max_batch * (
+            pages_for(prefill_chunk, page_size) + 1
+        )
+
+    # ------------------------------------------------------------ lifecycle
+
+    def add(self, req: Request) -> None:
+        ps = self.allocator.page_size
+        need = pages_for(req.total_positions, ps)
+        if need > self.max_pages_per_req:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + "
+                f"{req.max_new_tokens} new tokens needs {need} pages, page "
+                f"table holds {self.max_pages_per_req} (page_size {ps})"
+            )
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return any(r is not None for r in self.slots) or bool(self.queue)
+
+    def _admit(self) -> None:
+        """Fill free rows from the queue (FIFO among arrived requests),
+        admitting only requests whose *lifetime* page needs fit in
+        free-minus-committed — growth of admitted requests never fails."""
+        ps = self.allocator.page_size
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None:
+                continue
+            pick = None
+            for req in self.queue:
+                if req.arrival > self.iteration:
+                    continue
+                need = pages_for(req.total_positions, ps)
+                if need <= self.allocator.n_free - self._committed:
+                    pick = req
+                    break
+            if pick is None:
+                continue
+            self.queue.remove(pick)
+            self.allocator.alloc(pick.rid)
+            self._committed += pages_for(pick.total_positions, ps)
+            pick.state = RUNNING
+            pick.slot = slot
+            self.slots[slot] = pick
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self) -> Optional[StepPlan]:
+        """Build the next mixed step, or None when no row has work this
+        iteration (call :meth:`tick` to advance past future arrivals)."""
+        self._admit()
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return None
+        any_prefill = any(r.computed < r.prompt_len for r in active)
+        c = self.prefill_chunk if any_prefill else 1
+        b, p = self.max_batch, self.max_pages_per_req
+        ps = self.allocator.page_size
+
+        tokens = np.zeros((b, c), np.int32)
+        positions = np.full((b, c), -1, np.int32)
+        tables = np.full((b, p), NULL_PAGE, np.int32)
+        sample_idx = np.zeros((b,), np.int32)
+        sample_mask = np.zeros((b,), bool)
+        rows: List[Optional[Request]] = [None] * b
+        n_new = [0] * b
+        fresh: List[int] = []
+
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            s0 = req.prompt_len
+            if req.computed < s0:  # chunked prefill
+                n = min(c, s0 - req.computed)
+                tokens[slot, :n] = req.prompt[req.computed : req.computed + n]
+                sample = req.computed + n == s0
+            else:  # decode: feed the last sampled token
+                n = 1
+                tokens[slot, 0] = req.out[-1]
+                sample = True
+            positions[slot, :n] = np.arange(
+                req.computed, req.computed + n, dtype=np.int32
+            )
+            grown = self.allocator.ensure(req.rid, req.computed + n)
+            self._committed -= len(grown)
+            fresh.extend(grown)
+            table = self.allocator.page_table(req.rid)
+            tables[slot, : len(table)] = table
+            sample_idx[slot] = n - 1
+            sample_mask[slot] = sample
+            rows[slot] = req
+            n_new[slot] = n
+        assert len(fresh) <= self.scrub_width, (fresh, self.scrub_width)
+        scrub = np.full((self.scrub_width,), NULL_PAGE, np.int32)
+        scrub[: len(fresh)] = fresh
+        return StepPlan(
+            tokens, positions, tables, sample_idx, sample_mask, rows, n_new,
+            scrub,
+        )
+
+    def tick(self) -> None:
+        """Advance one iteration without compute (future arrivals only)."""
+        self.iteration += 1
+
+    # --------------------------------------------------------------- commit
+
+    def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
+        """Apply one step's results: advance positions, record sampled
+        tokens, retire finished requests (their pages return to the pool
+        and the row frees for next iteration's admission)."""
+        self.iteration += 1
+        for slot, req in enumerate(plan.rows):
+            if req is None:
+                continue
+            req.computed += plan.n_new[slot]
+            if plan.sample_mask[slot]:
+                req.out.append(int(sampled[slot]))
+                if len(req.out) >= req.max_new_tokens:
+                    req.state = FINISHED
+                    req.slot = None
+                    self.allocator.free(req.rid)
+                    self.slots[slot] = None

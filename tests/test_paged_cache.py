@@ -1,0 +1,261 @@
+"""Paged KV cache tests: allocator invariants (unit + 500-case
+deterministic fuzz + hypothesis fuzz), and paged read/write parity with
+the ring-cache semantics the attention layers were built on.
+
+The allocator invariants under arbitrary alloc/append/free interleavings:
+  * no page is ever shared by two live requests (aliasing),
+  * free ∪ live pages always partition {1..n_pages-1} (no leaks),
+  * the null page 0 is never handed out,
+  * ``slot_of`` reconstructs each request's logical KV stream exactly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import HAVE_HYPOTHESIS, given, settings, st
+from repro.serve.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    make_paged_cache,
+    pages_for,
+)
+
+
+# ------------------------------------------------------------- unit tests
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+
+
+def test_allocator_validation():
+    with pytest.raises(ValueError, match="page_size"):
+        PageAllocator(4, 0)
+    with pytest.raises(ValueError, match="null page"):
+        PageAllocator(1, 8)
+
+
+def test_allocator_basics():
+    a = PageAllocator(5, 4)  # pages 1..4 usable
+    assert a.n_free == 4
+    a.alloc("r0")
+    assert a.ensure("r0", 5) == [1, 2]  # low ids first, deterministic
+    assert a.slot_of("r0", 0) == (1, 0)
+    assert a.slot_of("r0", 5) == (2, 1)
+    with pytest.raises(ValueError, match="not backed"):
+        a.slot_of("r0", 8)
+    with pytest.raises(ValueError, match="already allocated"):
+        a.alloc("r0")
+    a.alloc("r1")
+    assert a.ensure("r1", 8) == [3, 4]
+    with pytest.raises(ValueError, match="out of KV pages"):
+        a.ensure("r1", 9)
+    # failed ensure must not leak partial allocations
+    assert a.n_free == 0 and a.page_table("r1") == (3, 4)
+    a.free("r0")
+    assert a.n_free == 2
+    assert a.ensure("r1", 9) == [1]  # recycled
+    assert NULL_PAGE not in a.page_table("r1")
+
+
+# ------------------------------------------------- fuzz harness (shared)
+
+
+def _check_invariants(a: PageAllocator, streams: dict):
+    live_pages = [p for rid in a.live() for p in a.page_table(rid)]
+    assert len(live_pages) == len(set(live_pages)), "page aliased"
+    assert NULL_PAGE not in live_pages, "null page allocated"
+    assert a.n_free + len(live_pages) == a.n_pages - 1, "pages leaked"
+    for rid, stream in streams.items():
+        # reconstruct the logical stream through the page table
+        for pos, val in enumerate(stream):
+            page, slot = a.slot_of(rid, pos)
+            assert _PHYS[(page, slot)] == val, (rid, pos)
+
+
+_PHYS = {}  # (page, slot) -> last value written; fuzz-model physical memory
+
+
+def _run_schedule(n_pages, page_size, ops):
+    """Drive the allocator through an op schedule, modelling physical
+    writes, checking every invariant after every op.
+
+    ops: list of (kind, arg) with kind in {"new", "append", "free"};
+    ``arg`` selects the target request (modulo live/total counts).
+    """
+    _PHYS.clear()
+    a = PageAllocator(n_pages, page_size)
+    streams = {}  # rid -> list of written values (the logical stream)
+    next_rid, next_val = 0, 0
+    for kind, arg in ops:
+        if kind == "new":
+            a.alloc(next_rid)
+            streams[next_rid] = []
+            next_rid += 1
+        elif kind == "append" and streams:
+            rid = sorted(streams)[arg % len(streams)]
+            stream = streams[rid]
+            try:
+                a.ensure(rid, len(stream) + 1)
+            except ValueError:
+                _check_invariants(a, streams)  # failed growth: no effects
+                continue
+            page, slot = a.slot_of(rid, len(stream))
+            _PHYS[(page, slot)] = next_val
+            stream.append(next_val)
+            next_val += 1
+        elif kind == "free" and streams:
+            rid = sorted(streams)[arg % len(streams)]
+            a.free(rid)
+            del streams[rid]
+        _check_invariants(a, streams)
+
+
+def _random_ops(rng, n_ops):
+    kinds = rng.choice(["new", "append", "append", "append", "free"], n_ops)
+    args = rng.integers(0, 64, n_ops)
+    return list(zip(kinds.tolist(), args.tolist()))
+
+
+def test_allocator_fuzz_deterministic():
+    """500 seeded random alloc/append/free interleavings over small pools
+    (tight pools force recycling and out-of-pages paths) — always runs,
+    independent of hypothesis availability."""
+    for seed in range(500):
+        rng = np.random.default_rng(seed)
+        n_pages = int(rng.integers(2, 9))
+        page_size = int(rng.integers(1, 5))
+        _run_schedule(n_pages, page_size, _random_ops(rng, int(rng.integers(5, 40))))
+
+
+@settings(max_examples=500, deadline=None)
+@given(
+    n_pages=st.integers(min_value=2, max_value=8),
+    page_size=st.integers(min_value=1, max_value=4),
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["new", "append", "append", "free"]),
+            st.integers(min_value=0, max_value=63),
+        ),
+        max_size=40,
+    ),
+)
+def test_allocator_fuzz_hypothesis(n_pages, page_size, ops):
+    """Hypothesis search over the same schedule space (shrinks failures
+    to minimal interleavings); skips when hypothesis is not installed
+    (tests/_hypo.py optional-skip pattern)."""
+    _run_schedule(n_pages, page_size, ops)
+
+
+# --------------------------------------------- paged read/write vs ring
+
+
+def _small_cfg():
+    from repro import configs
+
+    cfg = configs.get_config("granite_3_8b", smoke=True)
+    return dataclasses.replace(
+        cfg, vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32"
+    )
+
+
+def test_paged_write_read_roundtrip_matches_ring_semantics():
+    """Writing a request's tokens through its page table and gathering
+    them back presents exactly the (values, slot-positions) window the
+    ring cache would: values at gathered index == logical position, all
+    other slots masked (-1)."""
+    from repro.models import attention
+
+    cfg = _small_cfg()
+    ps, n_pages = 4, 9
+    cache = make_paged_cache(cfg, n_pages, ps)
+    kvd = cfg.kv_dim()
+    a = PageAllocator(n_pages, ps)
+    a.alloc(0)
+    a.alloc(1)
+    rng = np.random.default_rng(0)
+    # two requests at different positions: r0 has 6 tokens, r1 has 3
+    lens = {0: 6, 1: 3}
+    ref = {
+        r: rng.normal(size=(lens[r], kvd)).astype(np.float32) for r in lens
+    }
+    k_layer, v_layer, pos_tbl = cache["k"][0], cache["v"][0], cache["pos"]
+    for r in lens:
+        a.ensure(r, lens[r])
+    p_max = 3
+    tables = np.full((2, p_max), NULL_PAGE, np.int32)
+    for r in lens:
+        t = a.page_table(r)
+        tables[r, : len(t)] = t
+    # write each request's tokens in two chunks (append semantics)
+    for r in lens:
+        for lo, hi in ((0, 2), (2, lens[r])):
+            positions = np.full((2, hi - lo), -1, np.int32)
+            positions[r] = np.arange(lo, hi)
+            newk = np.zeros((2, hi - lo, kvd), np.float32)
+            newk[r] = ref[r][lo:hi]
+            pos_tbl = attention.paged_update_pos(
+                pos_tbl, jnp.asarray(positions), jnp.asarray(tables)
+            )
+            k_layer, v_layer = attention.paged_update(
+                k_layer, v_layer, jnp.asarray(newk), jnp.asarray(newk),
+                jnp.asarray(positions), jnp.asarray(tables),
+            )
+    k_win, v_win, pos_win = attention.paged_read(
+        k_layer, v_layer, pos_tbl, jnp.asarray(tables)
+    )
+    assert k_win.shape == (2, p_max * ps, kvd)
+    for r in lens:
+        n = lens[r]
+        np.testing.assert_array_equal(np.array(pos_win[r, :n]), np.arange(n))
+        np.testing.assert_array_equal(np.array(pos_win[r, n:]), -1)
+        np.testing.assert_array_equal(np.array(k_win[r, :n]), ref[r])
+        np.testing.assert_array_equal(np.array(v_win[r, :n]), ref[r])
+
+
+def test_paged_scrub_clears_recycled_page_positions():
+    """A page freed and re-handed to a new request must enter with all
+    slots invalid: lm.paged_step scrubs freshly allocated pages so stale
+    positions from the previous owner can never alias the new owner's
+    logical window (the exactness bug the scrub exists for)."""
+    from repro.models import attention
+
+    ps = 4
+    pos_tbl = jnp.full((3, ps), -1, jnp.int32)
+    tables = jnp.asarray([[1, 2]], jnp.int32)
+    # old owner wrote positions 0..3 into page 1
+    pos_tbl = attention.paged_update_pos(
+        pos_tbl, jnp.arange(4, dtype=jnp.int32)[None], tables
+    )
+    np.testing.assert_array_equal(np.array(pos_tbl[1]), [0, 1, 2, 3])
+    # page 1 recycled to a new request: scrub, then write position 0 only
+    pos_tbl = pos_tbl.at[jnp.asarray([1, NULL_PAGE])].set(-1)
+    pos_tbl = attention.paged_update_pos(
+        pos_tbl, jnp.asarray([[0]], jnp.int32), tables
+    )
+    # stale 1..3 are gone; only the new owner's position 0 is live
+    np.testing.assert_array_equal(np.array(pos_tbl[1]), [0, -1, -1, -1])
+
+
+def test_make_paged_cache_rejects_recurrent_families():
+    from repro import configs
+
+    cfg = configs.get_config("mamba2_130m", smoke=True)
+    with pytest.raises(ValueError, match="recurrent"):
+        make_paged_cache(cfg, 4, 8)
+
+
+def test_make_paged_cache_shapes():
+    cfg = _small_cfg()
+    cache = make_paged_cache(cfg, 5, 8)
+    assert cache["k"].shape == (cfg.n_layers, 5, 8, cfg.kv_dim())
+    assert cache["v"].shape == (cfg.n_layers, 5, 8, cfg.kv_dim())
+    assert cache["pos"].shape == (5, 8)
+    assert int(jnp.max(cache["pos"])) == -1

@@ -1,6 +1,17 @@
-"""Serving-engine prefill tests: the batched (single jitted call) prefill
-must produce exactly the tokens of the per-token stepped path, issue O(1)
-dispatches per prompt, and compose with DBB-packed weights."""
+"""Serving-engine tests.
+
+Prefill: the batched (single jitted call) prefill must produce exactly
+the tokens of the per-token stepped path, issue O(1) dispatches per
+prompt, and compose with DBB-packed weights.
+
+Continuous batching (the paged-KV scheduler): for every family in
+``BATCHED_PREFILL_FAMILIES`` × wire_dtype ∈ {native, int8},
+continuous-batched decode — staggered arrivals, mixed prompt lengths,
+queueing beyond max_batch, page recycling — must emit **byte-identical**
+tokens per request vs the solo stepped engine; plus batch-invariance
+property tests (native exact; the int8 per-tensor-scale violation of the
+one-shot batched wire is a documented xfail, the ready-made acceptance
+test for extending per-row scales beyond the continuous path)."""
 
 import dataclasses
 
@@ -16,9 +27,12 @@ from repro.serve.engine import Engine, ServeConfig
 
 def small_cfg(arch="granite_3_8b", **kw):
     cfg = configs.get_config(arch, smoke=True)
-    return dataclasses.replace(
-        cfg, vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32", **kw
-    )
+    over = dict(vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32")
+    if arch == "qwen2_vl_72b":
+        # M-RoPE sections of the smoke config need head_dim 32
+        over["d_model"] = 128
+    over.update(kw)
+    return dataclasses.replace(cfg, **over)
 
 
 def _prompts(vocab, b=2, s0=8, seed=0):
@@ -164,6 +178,200 @@ def test_wire_dtype_validation():
         Engine(params, cfg, ServeConfig(wire_dtype="int8"))
     with pytest.raises(ValueError, match="wire_dtype"):
         Engine(params, cfg, ServeConfig(wire_dtype="int-8", pack_weights=True))
+
+
+# --------------------------------------------- continuous batching (paged KV)
+
+# one smoke arch per BATCHED_PREFILL_FAMILIES member, plus the MLA
+# variant of "dense" (its latent cache pages differently than GQA)
+CONTINUOUS_ARCHS = (
+    "granite_3_8b",         # dense / GQA
+    "minicpm3_4b",          # dense / MLA latent cache
+    "granite_moe_1b_a400m", # moe
+    "qwen2_vl_72b",         # vlm (M-RoPE positions)
+)
+
+
+def _wire_kwargs(wire):
+    return dict(pack_weights=True, wire_dtype="int8") if wire == "int8" else {}
+
+
+@pytest.mark.parametrize("arch", CONTINUOUS_ARCHS)
+@pytest.mark.parametrize("wire", ["native", "int8"])
+def test_continuous_matches_stepped_per_request(arch, wire):
+    """Token-exactness parity: continuous-batched decode with staggered
+    arrivals, mixed prompt lengths, queueing beyond max_batch and page
+    recycling emits byte-identical tokens per request vs the solo
+    stepped engine.  Exactness under the int8 wire comes from the
+    continuous path's per-row dynamic activation scales: the int8
+    datapath is integer-exact, so per-token scales decouple a request
+    from its co-batch entirely."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32) for s in (9, 5, 12)
+    ]
+    wkw = _wire_kwargs(wire)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=2, prefill_chunk=4, **wkw,
+    ))
+    outs = eng.generate_requests(prompts, 6, arrivals=[0, 3, 1])
+    ref = Engine(params, cfg, ServeConfig(max_seq=32, prefill_mode="stepped", **wkw))
+    for i, prompt in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[i], ref.generate(prompt[None], 6)[0],
+            err_msg=f"request {i} diverged from its solo stepped run",
+        )
+
+
+def test_continuous_generate_matches_batched_api():
+    """Engine.generate(prefill_mode='continuous') returns the same
+    [B, S0+n] layout as the other modes, token-identical to stepped."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=3, s0=8)
+    kw = dict(max_seq=48, page_size=8, max_batch=3, prefill_chunk=4)
+    out_c = Engine(
+        params, cfg, ServeConfig(prefill_mode="continuous", **kw)
+    ).generate(prompts, 8)
+    out_s = Engine(
+        params, cfg, ServeConfig(max_seq=48, prefill_mode="stepped")
+    ).generate(prompts, 8)
+    assert out_c.shape == (3, 16)
+    np.testing.assert_array_equal(out_c, out_s)
+
+
+def test_continuous_interleaves_prefill_with_decode():
+    """Chunked prefill must not stall in-flight decodes: with a long
+    prompt arriving mid-decode, the short request keeps emitting one
+    token per iteration while the long prompt streams through in
+    chunks — total steps stay near max(prefill_chunks + decodes) rather
+    than their serialized sum."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    short = rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+    long = rng.integers(0, cfg.vocab, (24,)).astype(np.int32)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=40,
+        page_size=8, max_batch=2, prefill_chunk=4,
+    ))
+    outs = eng.generate_requests([short, long], [12, 4], arrivals=[0, 2])
+    # short: 1 prefill chunk + 11 decode steps; long: 6 chunks + 3 decodes,
+    # admitted at iteration 2 — interleaved upper bound, not the sum
+    assert eng.step_calls <= 13
+    ref = Engine(params, cfg, ServeConfig(max_seq=40, prefill_mode="stepped"))
+    np.testing.assert_array_equal(outs[0], ref.generate(short[None], 12)[0])
+    np.testing.assert_array_equal(outs[1], ref.generate(long[None], 4)[0])
+
+
+@pytest.mark.parametrize("wire", ["native", "int8"])
+def test_continuous_batch_invariance(wire):
+    """A request's continuous-mode tokens do not depend on which
+    requests it is co-batched with (native: row-independent math; int8:
+    per-row dynamic scales make the integer-exact path row-independent
+    too)."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    kw = dict(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=3, prefill_chunk=4, **_wire_kwargs(wire),
+    )
+    solo = Engine(params, cfg, ServeConfig(**kw)).generate_requests([a], 8)[0]
+    for seed in (100, 101):
+        oth = np.random.default_rng(seed).integers(
+            0, cfg.vocab, (2, 8)
+        ).astype(np.int32)
+        co = Engine(params, cfg, ServeConfig(**kw)).generate_requests(
+            [a, oth[0], oth[1]], 8
+        )[0]
+        np.testing.assert_array_equal(solo, co)
+
+
+def test_batched_prefill_batch_invariance_native():
+    """One-shot batched prefill is batch-invariant on the native wire."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    scfg = ServeConfig(max_seq=32, prefill_mode="batched")
+    solo = Engine(params, cfg, scfg).generate(a[None], 8)[0]
+    oth = np.random.default_rng(100).integers(0, cfg.vocab, (3, 8)).astype(np.int32)
+    co = Engine(params, cfg, scfg).generate(
+        np.concatenate([a[None], oth], 0), 8
+    )[0]
+    np.testing.assert_array_equal(solo, co)
+
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="known int8 per-tensor-scale violation (ROADMAP): one-shot "
+    "batched prefill quantizes the whole co-batch with one dynamic "
+    "scale, so a co-batched outlier rescales every request.  The "
+    "continuous path already fixes this with per-row scales; this is "
+    "the acceptance test for extending them to the batched wire.",
+)
+def test_batched_prefill_batch_invariance_int8():
+    """Documented violation: int8 one-shot batched prefill is NOT batch
+    invariant (per-tensor dynamic activation scales couple co-batched
+    requests).  Flips to passing once per-row scales cover the batched
+    wire too."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    scfg = ServeConfig(
+        max_seq=32, prefill_mode="batched", pack_weights=True, wire_dtype="int8"
+    )
+    solo = Engine(params, cfg, scfg).generate(a[None], 8)[0]
+    oth = np.random.default_rng(100).integers(0, cfg.vocab, (3, 8)).astype(np.int32)
+    co = Engine(params, cfg, scfg).generate(
+        np.concatenate([a[None], oth], 0), 8
+    )[0]
+    np.testing.assert_array_equal(solo, co)
+
+
+def test_serve_config_validation():
+    """page_size/max_pages/max_seq coherence fails loudly at construction
+    with actionable messages."""
+    with pytest.raises(ValueError, match="page_size"):
+        ServeConfig(page_size=0)
+    with pytest.raises(ValueError, match="max_seq"):
+        ServeConfig(max_seq=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    # max_pages too small to hold even one max_seq request
+    with pytest.raises(ValueError, match="null page"):
+        ServeConfig(max_seq=64, page_size=8, max_pages=8)
+    # exactly enough (8 data pages + null) is fine, and derived totals
+    scfg = ServeConfig(max_seq=64, page_size=8, max_pages=9)
+    assert scfg.pages_per_request == 8
+    assert scfg.total_pages == 9
+    assert ServeConfig(max_seq=64, page_size=8, max_batch=2).total_pages == 17
+
+
+def test_continuous_rejects_oversized_and_recurrent():
+    """Requests that cannot fit max_seq fail loudly before any compute;
+    recurrent families cannot run continuous mode at all."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=16, page_size=8, max_batch=2,
+    ))
+    big = np.zeros((14,), np.int32)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.generate_requests([big], 4)
+    hy_cfg = small_cfg("hymba_1_5b")
+    hy_params, _ = lm.init_lm(hy_cfg, jax.random.PRNGKey(0))
+    bad = Engine(hy_params, hy_cfg, ServeConfig(prefill_mode="continuous"))
+    with pytest.raises(ValueError, match="recurrent"):
+        bad.generate(np.zeros((1, 4), np.int32), 1)
 
 
 def test_auto_mode_falls_back_for_recurrent_families():
