@@ -36,6 +36,7 @@ TRACKED_RATIOS = (
     "weight_bytes_ratio",
     "int8_weight_bytes_ratio",
     "int8_vs_bf16_weight_bytes_ratio",
+    "int8_kv_bytes_ratio",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get

@@ -155,6 +155,32 @@ def bench_dbb_matmul(smoke: bool = False):
     return rows, round(dense_bytes / int8_packed_bytes, 3)
 
 
+def bench_kv_quant(smoke: bool = False):
+    """The int8 KV cache's write/read helpers on a decode-shaped window:
+    per-row quantize (write side) and dequantize (read side) of a
+    [B*W, KVD] logical window — the per-step overhead the
+    ``int8_kv_bytes_ratio`` buys (serve_bench has the end-to-end rows)."""
+    from repro.core import quant
+
+    rows_n = 4 * 64 if smoke else 16 * 512
+    kvd = 1024
+    reps = 2 if smoke else 5
+    x = jnp.asarray(
+        np.random.default_rng(3).normal(size=(rows_n, kvd)).astype(np.float32)
+    )
+    f_q = jax.jit(quant.quantize_rows)
+    f_dq = jax.jit(lambda q, s: quant.dequantize_rows(q, s, dtype=jnp.float32))
+    us_q = _time(f_q, x, n=reps)
+    q, s = f_q(x)
+    us_dq = _time(f_dq, q, s, n=reps)
+    rows = [
+        {"impl": "kv_quantize_rows", "us": round(us_q, 1)},
+        {"impl": "kv_dequantize_rows", "us": round(us_dq, 1)},
+        {"shape": [rows_n, kvd]},
+    ]
+    return rows, round(us_q + us_dq, 1)
+
+
 def bench_dap_prune(smoke: bool = False):
     shape = (128, 1024) if smoke else (512, 4096)
     reps = 2 if smoke else 5

@@ -54,6 +54,8 @@ def main() -> None:
     # kernel microbenchmarks (wall time of the DBB ops on this host)
     jobs.append(("kernel_dbb_matmul", kernel_bench.bench_dbb_matmul, {"smoke": smoke}))
     jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {"smoke": smoke}))
+    # int8 KV-cache write/read helpers (serve_bench has the end-to-end rows)
+    jobs.append(("kernel_kv_quant", kernel_bench.bench_kv_quant, {"smoke": smoke}))
     # serving throughput: continuous batching vs one-shot batched prefill
     from benchmarks import serve_bench
 

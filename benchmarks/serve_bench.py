@@ -1,6 +1,6 @@
 """Serving-throughput microbenchmark: continuous batching (paged KV,
 chunked-prefill interleaving) vs the one-shot batched-prefill engine on
-identical request sets.
+identical request sets, plus the int8 KV cache's cost/benefit rows.
 
 Times whole ``generate`` calls (host scheduling + jitted steps) on a tiny
 CPU config after a warmup pass per engine, and reports tokens/s plus the
@@ -8,6 +8,12 @@ continuous-vs-oneshot ratio.  The ratio is timing-derived, so it is NOT a
 gated metric (benchmarks/compare.py gates only deterministic byte
 ratios); the µs rows ride the same-host >25% slowdown gate like every
 other timed row.
+
+INT8 KV rows: ``int8_kv_bytes_ratio`` is the deterministic paged-cache
+byte shrink vs f32 KV storage (~4x; int8 values + one f32 scale per
+token row — gated like the other wire-format ratios), and the
+``serve_decode_step_{f32,int8}_kv`` µs rows time one warm jitted decode
+step under each KV wire (the dequant-at-read overhead the ratio buys).
 """
 
 from __future__ import annotations
@@ -27,6 +33,66 @@ def _time_once(fn, passes=3):
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _time_step(fn, passes=3, n=5):
+    """Best-of-``passes`` mean wall µs of a jitted step (warm)."""
+    best = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) / n * 1e6)
+    return best
+
+
+def bench_kv_cache(cfg, params, passes):
+    """INT8 KV cache rows: deterministic bytes ratio + decode-step µs."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import lm
+    from repro.serve import paged_cache
+
+    def kv_bytes(c):
+        # pos is identical bookkeeping under both wires: exclude it so
+        # the ratio reflects the K/V payload the wire actually changes
+        return paged_cache.cache_nbytes({n: c[n] for n in c if n != "pos"})
+
+    # bytes ratio at the REAL model's kv_dim (eval_shape: no allocation)
+    # — the tiny timing config's 64-wide rows would understate the
+    # asymptotic 4D/(D+4) shrink the wire delivers at serving width
+    from repro import configs
+
+    full = dc.replace(configs.get_config("granite_3_8b"), dtype="float32")
+    full8 = dc.replace(
+        full, sparsity=dc.replace(full.sparsity, kv_dtype="int8")
+    )
+    cache_f = jax.eval_shape(lambda: paged_cache.make_paged_cache(full, 17, 16))
+    cache_8 = jax.eval_shape(lambda: paged_cache.make_paged_cache(full8, 17, 16))
+    ratio = kv_bytes(cache_f) / kv_bytes(cache_8)
+
+    cfg8 = dc.replace(
+        cfg, sparsity=dc.replace(cfg.sparsity, kv_dtype="int8")
+    )
+
+    rows = [{"int8_kv_bytes_ratio": round(ratio, 3)}]
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (4, 1)).astype(np.int32)
+    )
+    for label, c in (("f32", cfg), ("int8", cfg8)):
+        step = jax.jit(lambda p, ca, t, pos, _c=c: lm.decode_step(p, ca, t, pos, _c))
+        cache = lm.make_cache(c, 4, 64)
+        jax.block_until_ready(step(params, cache, toks, jnp.int32(8)))  # warm
+        us = _time_step(
+            lambda: step(params, cache, toks, jnp.int32(8))[0], passes
+        )
+        rows.append(
+            {"impl": f"serve_decode_step_{label}_kv", "us": round(us, 1)}
+        )
+    return rows, round(ratio, 3)
 
 
 def bench_serve(smoke: bool = False):
@@ -56,6 +122,7 @@ def bench_serve(smoke: bool = False):
     s_cont = _time_once(lambda: cont.generate(prompts, n_new), passes)
     tok = b * n_new
     tps_one, tps_cont = tok / s_one, tok / s_cont
+    kv_rows, _ = bench_kv_cache(cfg, params, passes)
     rows = [
         {"impl": "serve_oneshot_batched", "us": round(s_one * 1e6, 1),
          "tokens_per_s": round(tps_one, 1)},
@@ -63,6 +130,7 @@ def bench_serve(smoke: bool = False):
          "tokens_per_s": round(tps_cont, 1)},
         # timing-derived, reported not gated (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
+        *kv_rows,
         {"shape": [b, s0, n_new], "prefill_chunk": 8, "page_size": 16},
     ]
     return rows, round(tps_cont / tps_one, 3)

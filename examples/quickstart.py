@@ -1,11 +1,18 @@
 """Quickstart: the DBB structured-sparsity API in 60 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` shrinks the end-to-end model section (fewer layers, shorter
+sequence) so the CI docs job can run the whole script in seconds.
 """
+
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+SMOKE = "--smoke" in sys.argv
 
 from repro.core import dbb
 from repro.core.dap import dap
@@ -44,12 +51,19 @@ assert np.allclose(np.asarray(y), np.asarray(y_k), atol=1e-4)
 print("pallas kernel matches oracle: OK")
 
 # --- 6. A DBB-sparse model end to end -----------------------------------
+import dataclasses
+
 from repro import configs
 from repro.models import lm
 
 cfg_m = configs.get_config("granite_3_8b", smoke=True)  # awdbb by default
+if SMOKE:  # CI-sized: tiny model, short sequence
+    cfg_m = dataclasses.replace(
+        cfg_m, vocab=64, d_model=64, d_ff=128, n_layers=2
+    )
+seq = 8 if SMOKE else 32
 params, _ = lm.init_lm(cfg_m, jax.random.PRNGKey(0))
-tokens = jnp.asarray(rng.integers(0, cfg_m.vocab, size=(2, 32)).astype(np.int32))
+tokens = jnp.asarray(rng.integers(0, cfg_m.vocab, size=(2, seq)).astype(np.int32))
 logits, _ = lm.forward(params, tokens, cfg_m)
 print("model forward with joint A/W-DBB:", logits.shape)
 print("quickstart OK")

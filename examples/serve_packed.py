@@ -61,6 +61,27 @@ def main():
     stable = int((out_i8[:, s0:] == out_p[:, s0:]).all(axis=0).sum())
     print(f"int8 wire: {stable}/{out_p.shape[1] - s0} generated columns "
           "token-identical")
+
+    # int8 KV cache (kv_dtype="int8"): ~4x fewer cache bytes, and WITHIN
+    # the int8-KV wire batched and stepped serving stay byte-identical —
+    # prefill attends over the same quantization round-trip the cache
+    # stores (docs/quantization.md)
+    from repro.serve import paged_cache
+
+    kv_f = lm.make_cache(cfg, 4, 64)
+    cfg_kv8 = dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, kv_dtype="int8"))
+    kv_8 = lm.make_cache(cfg_kv8, 4, 64)
+    print(f"KV cache: f32 {paged_cache.cache_nbytes(kv_f)/1e6:.2f} MB -> "
+          f"int8 {paged_cache.cache_nbytes(kv_8)/1e6:.2f} MB")
+    kvkw = dict(max_seq=64, pack_weights=True, kv_dtype="int8")
+    out_kv_b = Engine(params, cfg, ServeConfig(
+        prefill_mode="batched", **kvkw)).generate(prompts, 16)
+    out_kv_s = Engine(params, cfg, ServeConfig(
+        prefill_mode="stepped", **kvkw)).generate(prompts, 16)
+    assert (out_kv_b == out_kv_s).all(), \
+        "int8-KV batched must match int8-KV stepped exactly"
+    print("int8 KV: batched == stepped generation: OK")
     print("sample:", out_p[0].tolist())
 
 

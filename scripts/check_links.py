@@ -1,0 +1,44 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in README.md and docs/*.md (CI docs job).
+
+Checks every ``[text](target)`` whose target is not an absolute URL or a
+pure in-page anchor: the referenced file must exist relative to the
+linking document (anchors within existing files are not resolved).
+
+    python scripts/check_links.py [files...]   # default: README.md docs/*.md
+"""
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(path: Path) -> list:
+    broken = []
+    for target in LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            broken.append(f"{path}: broken link -> {target}")
+    return broken
+
+
+def main(argv) -> int:
+    files = [Path(a) for a in argv] or [
+        Path(p) for p in ["README.md", *glob.glob("docs/*.md")]
+    ]
+    broken = [f"{f}: file not found" for f in files if not f.exists()]
+    broken += [b for f in files if f.exists() for b in check(f)]
+    for line in broken:
+        print(f"FAIL {line}")
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not broken else f'{len(broken)} broken link(s)'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -8,7 +8,14 @@ DP4M8 MACs, 32-bit accumulators).  Two users share these helpers:
   per-tensor dynamic scale for activations, int32 accumulation in the
   matmul, dequant fused into the epilogue;
 * **gradient compression** (``train/compression.py``): per-tensor scale
-  on the data-parallel all-reduce payload.
+  on the data-parallel all-reduce payload;
+* the **int8 KV cache** (``models/attention.py`` /
+  ``serve/paged_cache.py``): per-token (per-row) scales via
+  :func:`quantize_rows` / :func:`dequantize_rows` — K/V quantize at
+  cache-write time and dequantize at the read boundary.
+
+The full wire-format story (who uses which scale granularity, and why
+the datapath stays exact) lives in ``docs/quantization.md``.
 
 The scheme is symmetric (no zero-point): ``q = clip(round(x/s), ±127)``
 with ``s = amax/127``, so zero is exactly representable — essential for
@@ -65,3 +72,27 @@ def _norm_axes(axis: Axis, ndim: int):
     if isinstance(axis, int):
         axis = (axis,)
     return tuple(a % ndim for a in axis)
+
+
+# ------------------------------------------------------- per-row (KV cache)
+
+
+def quantize_rows(x: jax.Array):
+    """``x [..., D] -> (q int8 [..., D], scale f32 [...])`` — one symmetric
+    scale per row (the last axis is the shared extent).
+
+    The KV-cache write helper: each cached token row (``KVD`` for the GQA
+    ring/pages, ``lora+rope`` for the MLA latent) quantizes on its own
+    amax, so a token's stored bytes never depend on what it is batched
+    with — the same row-independence argument that makes the per-row
+    activation wire batch-invariant (``docs/quantization.md``).  All-zero
+    rows get scale 1.0 and quantize to exact zeros (empty cache slots
+    stay exact zeros through the round-trip).
+    """
+    return quantize(x, axis=-1)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    """Inverse of :func:`quantize_rows`: ``q [..., D] * scale [...]`` —
+    the KV-cache read helper (ring gather / ``paged_read``)."""
+    return dequantize(q, scale, axis=-1, dtype=dtype)

@@ -33,11 +33,17 @@ class SparsityConfig:
     serve_packed: bool = False
     # int8-wire dynamic activation scale granularity: "per_tensor" (one
     # scalar per call — cheapest, but couples co-batched requests and
-    # batched-vs-stepped prefill, see ROADMAP) or "per_row" (one scale
-    # per token — each token quantizes independently, which makes the
-    # integer-exact int8 path bit-identical across batch compositions;
-    # the continuous serving engine uses this mode)
+    # batched-vs-stepped prefill) or "per_row" (one scale per token —
+    # each token quantizes independently, which makes the integer-exact
+    # int8 path bit-identical across batch compositions; the serving
+    # engine forces this mode on every wire_dtype="int8" path)
     act_scale: str = "per_tensor"
+    # KV-cache storage dtype: "native" keeps the model dtype; "int8"
+    # stores cache values quantized with per-token symmetric scales
+    # (quantize at write, dequantize at the read boundary — ring and
+    # paged backends both; see docs/quantization.md).  Orthogonal to the
+    # weight/activation wire: it applies to dense serving too.
+    kv_dtype: str = "native"
 
     def __post_init__(self):
         if self.mode not in ("dense", "wdbb", "awdbb"):
@@ -45,6 +51,10 @@ class SparsityConfig:
         if self.act_scale not in ("per_tensor", "per_row"):
             raise ValueError(
                 f"unknown act_scale {self.act_scale!r}; per_tensor|per_row"
+            )
+        if self.kv_dtype not in ("native", "int8"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; native|int8"
             )
 
     @property

@@ -7,6 +7,17 @@ slot positions ``pos [B, W] int32`` (-1 ⇒ empty).  Full-attention caches
 use ``W = max_seq`` (slot == position); windowed caches use ``W = window``
 (slot == position % W).  Validity/causality/window masking all derive from
 the slot-position array, so one code path serves every arch.
+
+INT8 KV wire (``SparsityConfig.kv_dtype="int8"``): caches whose dict
+carries ``k_scale``/``v_scale`` planes store int8 values quantized at
+write time with **per-token symmetric scales** (one f32 scale per cached
+row; ``core.quant.quantize_rows``) and dequantize at the read boundary —
+:func:`ring_window` for the ring, :func:`paged_read` for pages — so
+:func:`mha` and the MLA-absorbed path never see the wire format.  The
+write sites (:func:`fill_ring`, :func:`_update_ring`,
+:func:`paged_update`) quantize row-locally, which keeps a token's stored
+bytes independent of its co-batch (the batch-invariance argument of
+``docs/quantization.md``).
 """
 
 from __future__ import annotations
@@ -19,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import quant
 from repro.models import common, rope
 from repro.models.common import DATA, MODEL, linear, make_linear, make_norm, rmsnorm
 
@@ -29,7 +41,12 @@ NEG_INF = -1e30
 
 
 def make_kv_cache(batch: int, window: int, kv_dim: int, n_layers: int, dtype):
-    """Stacked-over-layers ring-buffer cache (scan xs layout)."""
+    """Stacked-over-layers ring-buffer cache (scan xs layout).
+
+    Model-aware construction (int8 KV planes, MLA's native dummy v,
+    hybrid state) lives in :func:`repro.models.lm.make_cache` — this
+    helper stays the bare symmetric ring.
+    """
     return {
         "k": jnp.zeros((n_layers, batch, window, kv_dim), dtype),
         "v": jnp.zeros((n_layers, batch, window, kv_dim), dtype),
@@ -37,49 +54,105 @@ def make_kv_cache(batch: int, window: int, kv_dim: int, n_layers: int, dtype):
     }
 
 
-def kv_cache_specs(sharded_window: bool = False):
-    win = DATA if sharded_window else None
-    return {
-        "k": P(None, None if sharded_window else DATA, win, MODEL),
-        "v": P(None, None if sharded_window else DATA, win, MODEL),
-        "pos": P(None, None if sharded_window else DATA, win),
-    }
+def kv_is_int8(cache_layer) -> bool:
+    """True when the cache dict stores the int8 KV wire (scale planes)."""
+    return "k_scale" in cache_layer
+
+
+def quantize_kv(x: jax.Array):
+    """Write-side KV quantization: one symmetric scale per token row."""
+    return quant.quantize_rows(x)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    """Read-side KV dequantization (inverse of :func:`quantize_kv`)."""
+    return quant.dequantize_rows(q, scale, dtype=dtype)
+
+
+def kv_roundtrip(x: jax.Array, dtype=None):
+    """``dequantize(quantize(x))`` per token row — what a cache write
+    followed by a cache read returns.  Prefill attends over this under
+    the int8 KV wire so one-shot prefill sees exactly the K/V that
+    stepped decode will read back (tokens stay parity with stepping)."""
+    q, s = quantize_kv(x)
+    return dequantize_kv(q, s, dtype or x.dtype)
+
+
+def ring_window(cache_layer, dtype):
+    """The ring cache's read boundary: ``(k [B, W, Dk], v [B, W, Dv])``
+    in compute ``dtype`` — each plane dequantized iff it carries a scale
+    plane, passed through unchanged otherwise (MLA caches quantize only
+    the latent ``k``; the 1-wide dummy ``v`` stays native).  Everything
+    above this call (:func:`mha`, :func:`_mla_absorbed`) is wire-format
+    agnostic."""
+    k, v = cache_layer["k"], cache_layer["v"]
+    if "k_scale" in cache_layer:
+        k = dequantize_kv(k, cache_layer["k_scale"], dtype)
+    if "v_scale" in cache_layer:
+        v = dequantize_kv(v, cache_layer["v_scale"], dtype)
+    return k, v
 
 
 def _update_ring(cache_layer, new_k, new_v, pos: jax.Array, window: int):
-    """Insert one step (S_new == 1) at slot pos % window.  ``pos`` scalar."""
+    """Insert one step (S_new == 1) at slot pos % window.  ``pos`` scalar.
+
+    Under the int8 KV wire the new row quantizes here — at write time —
+    and its per-token scale lands in the ``k_scale``/``v_scale`` plane.
+    """
     b = new_k.shape[0]
     slot = jnp.mod(pos, window)
-    k = jax.lax.dynamic_update_slice(cache_layer["k"], new_k, (0, slot, 0))
-    v = jax.lax.dynamic_update_slice(cache_layer["v"], new_v, (0, slot, 0))
-    posv = jax.lax.dynamic_update_slice(
+    out = {}
+    for name, new in (("k", new_k), ("v", new_v)):
+        sname = name + "_scale"
+        if sname in cache_layer:
+            new, sc = quantize_kv(new)
+            out[sname] = jax.lax.dynamic_update_slice(
+                cache_layer[sname], sc, (0, slot)
+            )
+        out[name] = jax.lax.dynamic_update_slice(
+            cache_layer[name], new, (0, slot, 0)
+        )
+    out["pos"] = jax.lax.dynamic_update_slice(
         cache_layer["pos"],
         jnp.full((b, 1), pos, jnp.int32),
         (0, slot),
     )
-    return {"k": k, "v": v, "pos": posv}
+    return out
 
 
-def fill_ring(cache_layer, new_k, new_v, s: int):
+def fill_ring(cache_layer, new_k, new_v, s: int, quantized=None):
     """Write a whole prompt (absolute positions ``0..s-1``) into the ring.
 
     The prefill-side counterpart of :func:`_update_ring`: keeps the last
     ``min(window, s)`` tokens at slots ``pos % window`` — exactly the
-    state per-token stepping would have left behind.  ``new_k/new_v``
-    are ``[B, S, KVD]`` (already RoPE'd where applicable).
+    state per-token stepping would have left behind (same per-token
+    quantization under the int8 KV wire).  ``new_k/new_v`` are
+    ``[B, S, KVD]`` (already RoPE'd where applicable).
+
+    ``quantized`` optionally maps a plane name to its precomputed
+    ``(q, scale)`` pair: prefill quantizes each plane ONCE, attends over
+    its dequantization, and hands the same pair here instead of paying a
+    second quantization pass (bit-identical either way).
     """
     window = cache_layer["k"].shape[1]
     b = new_k.shape[0]
     take = min(window, s)
     sel = jnp.arange(s - take, s)
     slots = jnp.mod(sel, window)
-    return {
-        "k": cache_layer["k"].at[:, slots].set(new_k[:, sel]),
-        "v": cache_layer["v"].at[:, slots].set(new_v[:, sel]),
-        "pos": cache_layer["pos"].at[:, slots].set(
-            jnp.broadcast_to(sel, (b, take)).astype(jnp.int32)
-        ),
-    }
+    out = {}
+    for name, new in (("k", new_k), ("v", new_v)):
+        sname = name + "_scale"
+        if sname in cache_layer:
+            if quantized is not None and name in quantized:
+                new, sc = quantized[name]
+            else:
+                new, sc = quantize_kv(new)
+            out[sname] = cache_layer[sname].at[:, slots].set(sc[:, sel])
+        out[name] = cache_layer[name].at[:, slots].set(new[:, sel])
+    out["pos"] = cache_layer["pos"].at[:, slots].set(
+        jnp.broadcast_to(sel, (b, take)).astype(jnp.int32)
+    )
+    return out
 
 
 # ----------------------------------------------------------- paged KV cache
@@ -109,20 +182,35 @@ def _paged_flat_idx(positions, page_tables, page_size: int):
     return (page * page_size + slot).reshape(-1), valid
 
 
-def paged_update(cache_k, cache_v, new_k, new_v, positions, page_tables):
+def paged_update(cache_layer, new_k, new_v, positions, page_tables):
     """Scatter a [B, S, D] chunk of new K/V into non-contiguous pages.
 
-    cache_k/v [N_pages, PS, D*]; positions [B, S]; page_tables [B, P].
-    Rows at different sequence positions write to different pages in the
-    same jitted step — the write half of continuous batching.
+    ``cache_layer`` holds ``k/v [N_pages, PS, D*]`` and — under the int8
+    KV wire — ``k_scale/v_scale [N_pages, PS]`` planes; positions
+    [B, S]; page_tables [B, P].  Rows at different sequence positions
+    write to different pages in the same jitted step — the write half of
+    continuous batching.  Int8 caches quantize each new token row here
+    (write time), scattering values and per-token scales to the same
+    flat slot, so padding rows land on the null page like every other
+    write.  Returns the updated planes (``pos`` excluded — the shared
+    slot table has its own update, :func:`paged_update_pos`).
     """
-    ps = cache_k.shape[1]
+    ps = cache_layer["k"].shape[1]
     flat, _ = _paged_flat_idx(positions, page_tables, ps)
-    kf = cache_k.reshape(-1, cache_k.shape[-1])
-    vf = cache_v.reshape(-1, cache_v.shape[-1])
-    kf = kf.at[flat].set(new_k.reshape(-1, new_k.shape[-1]).astype(kf.dtype))
-    vf = vf.at[flat].set(new_v.reshape(-1, new_v.shape[-1]).astype(vf.dtype))
-    return kf.reshape(cache_k.shape), vf.reshape(cache_v.shape)
+    out = {}
+    for name, new in (("k", new_k), ("v", new_v)):
+        c = cache_layer[name]
+        sname = name + "_scale"
+        if sname in cache_layer:
+            new, sc = quantize_kv(new)
+            sf = cache_layer[sname].reshape(-1)
+            out[sname] = sf.at[flat].set(sc.reshape(-1)).reshape(
+                cache_layer[sname].shape
+            )
+        cf = c.reshape(-1, c.shape[-1])
+        cf = cf.at[flat].set(new.reshape(-1, new.shape[-1]).astype(cf.dtype))
+        out[name] = cf.reshape(c.shape)
+    return out
 
 
 def paged_update_pos(pos_tbl, positions, page_tables):
@@ -135,19 +223,33 @@ def paged_update_pos(pos_tbl, positions, page_tables):
     return pos_tbl.reshape(-1).at[flat].set(vals).reshape(pos_tbl.shape)
 
 
-def paged_read(cache_k, cache_v, pos_tbl, page_tables):
+def paged_read(cache_layer, pos_tbl, page_tables, dtype=jnp.float32):
     """Gather each request's pages into a contiguous logical window.
 
     Returns (k [B, P*PS, Dk], v [B, P*PS, Dv], pos [B, P*PS]) — the same
     (values, slot-positions) interface the ring presents, so `mha`'s
-    position-derived masking needs no paged special case.
+    position-derived masking needs no paged special case.  This is the
+    paged cache's read boundary: int8 caches dequantize here (gathered
+    values × gathered per-token scales, output in compute ``dtype``), so
+    nothing above this call sees the wire format.  Stale values/scales on
+    recycled pages are harmless — masking derives from the (scrubbed)
+    position table, and dequantized garbage is finite, so its softmax
+    terms are exactly zero.
     """
     b, p = page_tables.shape
-    ps = cache_k.shape[1]
-    k_win = cache_k[page_tables].reshape(b, p * ps, cache_k.shape[-1])
-    v_win = cache_v[page_tables].reshape(b, p * ps, cache_v.shape[-1])
+    ps = cache_layer["k"].shape[1]
+
+    def read(name):
+        c = cache_layer[name]
+        win = c[page_tables].reshape(b, p * ps, c.shape[-1])
+        sname = name + "_scale"
+        if sname in cache_layer:
+            s_win = cache_layer[sname][page_tables].reshape(b, p * ps)
+            win = dequantize_kv(win, s_win, dtype)
+        return win
+
     pos_win = pos_tbl[page_tables].reshape(b, p * ps)
-    return k_win, v_win, pos_win
+    return read("k"), read("v"), pos_win
 
 
 # ------------------------------------------------------------ core attention
@@ -361,13 +463,13 @@ def gqa_forward(
         # pages.  cache_layer["pos"] must already hold this step's
         # positions (lm.paged_step writes the shared table once, before
         # the layer scan).
-        new_k_p, new_v_p = paged_update(
-            cache_layer["k"], cache_layer["v"],
+        new_kv = paged_update(
+            cache_layer,
             k.reshape(b, s, kvh * dh), v.reshape(b, s, kvh * dh),
             positions, page_tables,
         )
         k_win, v_win, pos_win = paged_read(
-            new_k_p, new_v_p, cache_layer["pos"], page_tables
+            new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
         )
         t = k_win.shape[1]
         out = mha(
@@ -378,19 +480,26 @@ def gqa_forward(
             window=cfg.sliding_window, chunk=None,
         )
         y = linear(p["wo"], out.reshape(b, s, h * dh), sparsity=sp, layer_idx=li)
-        return y, {"k": new_k_p, "v": new_v_p}
+        return y, new_kv
 
     if cache_layer is not None and decode_pos is None:
         # Single-pass prefill: full-sequence attention over the fresh K/V
         # (identical math to the cache-less path below) while the same
         # projections fill the ring — the layer stack runs ONCE per
         # prompt, no K/V-recompute second pass (see lm.prefill).
-        new_cache = fill_ring(
-            cache_layer,
-            k.reshape(b, s, kvh * dh),
-            v.reshape(b, s, kvh * dh),
-            s,
-        )
+        k_flat = k.reshape(b, s, kvh * dh)
+        v_flat = v.reshape(b, s, kvh * dh)
+        pre = None
+        if kv_is_int8(cache_layer):
+            # quantize ONCE: the ring stores these planes, and attention
+            # runs over their dequantization, so prefill sees exactly the
+            # K/V that stepped decode reads back
+            qk, sk = quantize_kv(k_flat)
+            qv, sv = quantize_kv(v_flat)
+            pre = {"k": (qk, sk), "v": (qv, sv)}
+            k = dequantize_kv(qk, sk, x.dtype).reshape(b, s, kvh, dh)
+            v = dequantize_kv(qv, sv, x.dtype).reshape(b, s, kvh, dh)
+        new_cache = fill_ring(cache_layer, k_flat, v_flat, s, quantized=pre)
         out = mha(
             q, k, v, positions, positions,
             window=cfg.sliding_window,
@@ -404,7 +513,10 @@ def gqa_forward(
         from repro.sharding import context as dist_ctx
 
         ctx = dist_ctx.get_context()
-        if ctx is not None and s == 1:
+        # flash_decode shards the full-precision ring over the model axis;
+        # the int8 KV wire takes the plain ring path (sharded int8 window
+        # merging is not implemented — see docs/quantization.md)
+        if ctx is not None and s == 1 and not kv_is_int8(cache_layer):
             sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
             n_sh = sizes[ctx.expert_axis]
             n_batch = 1
@@ -430,8 +542,9 @@ def gqa_forward(
             decode_pos,
             window,
         )
-        kk = new_cache["k"].reshape(b, window, kvh, dh)
-        vv = new_cache["v"].reshape(b, window, kvh, dh)
+        kk, vv = ring_window(new_cache, x.dtype)
+        kk = kk.reshape(b, window, kvh, dh)
+        vv = vv.reshape(b, window, kvh, dh)
         out = mha(
             q, kk, vv, positions, new_cache["pos"],
             window=cfg.sliding_window, chunk=None,
@@ -550,27 +663,38 @@ def mla_forward(
         # same math stepped decode runs, but with per-row positions over
         # non-contiguous pages (v pages are the ring's 1-wide dummy).
         latent = jnp.concatenate([c_kv, k_rope], axis=-1)
-        new_k_p, new_v_p = paged_update(
-            cache_layer["k"], cache_layer["v"],
+        new_kv = paged_update(
+            cache_layer,
             latent, jnp.zeros((b, s, 1), latent.dtype),
             positions, page_tables,
         )
         lat, _, pos_win = paged_read(
-            new_k_p, new_v_p, cache_layer["pos"], page_tables
+            new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
         )
         out = _mla_absorbed(
             q_nope, q_rope, lat, positions, pos_win, w_kv_up, m, scale, x.dtype
         )
         y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)
-        return y, {"k": new_k_p, "v": new_v_p}
+        return y, new_kv
 
     if cache_layer is not None and decode_pos is None:
         # Single-pass prefill: materialized attention (below) + latent
         # ring fill in the same trace — the cache stores (c_kv ‖ k_rope),
         # exactly what per-token absorbed decode would have written.
         latent = jnp.concatenate([c_kv, k_rope], axis=-1)
+        pre = None
+        if kv_is_int8(cache_layer):
+            # quantize the latent ONCE: the ring stores it, and the
+            # materialized attention below reads its dequantization —
+            # prefill and stepped decode then see the same bytes
+            ql, sl = quantize_kv(latent)
+            pre = {"k": (ql, sl)}
+            lat_rt = dequantize_kv(ql, sl, x.dtype)
+            c_kv = lat_rt[..., : m.kv_lora_rank]
+            k_rope = lat_rt[..., m.kv_lora_rank :]
         new_cache = fill_ring(
-            cache_layer, latent, jnp.zeros((b, s, 1), latent.dtype), s
+            cache_layer, latent, jnp.zeros((b, s, 1), latent.dtype), s,
+            quantized=pre,
         )
         cache_layer = None  # fall through to the materialized path
     else:
@@ -582,9 +706,11 @@ def mla_forward(
         new_cache = _update_ring(
             cache_layer, latent, jnp.zeros((b, s, 1), latent.dtype), decode_pos, window
         )
-        # absorbed scores over the ring window (shared with the paged path)
+        # absorbed scores over the ring window (shared with the paged
+        # path); ring_window dequantizes the latent under the int8 wire
+        lat_win, _ = ring_window(new_cache, x.dtype)
         out = _mla_absorbed(
-            q_nope, q_rope, new_cache["k"], positions, new_cache["pos"],
+            q_nope, q_rope, lat_win, positions, new_cache["pos"],
             w_kv_up, m, scale, x.dtype,
         )
         y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)

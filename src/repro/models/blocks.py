@@ -70,7 +70,13 @@ def decoder_block(
     )
     attn_cache = None
     if cache_layer is not None:
-        attn_cache = {k: cache_layer[k] for k in ("k", "v", "pos")}
+        # k/v/pos plus the int8 KV wire's per-token scale planes, when
+        # present (hybrid caches also carry ssm_* keys — filtered here)
+        attn_cache = {
+            k: cache_layer[k]
+            for k in ("k", "v", "pos", "k_scale", "v_scale")
+            if k in cache_layer
+        }
     if cfg.mla is not None:
         a_out, new_attn_cache = attn.mla_forward(
             p["attn"], h, cfg, positions,

@@ -170,19 +170,44 @@ def forward(
 
 
 def make_cache(cfg, batch: int, max_seq: int):
-    """Stacked ring-buffer cache sized for ``max_seq`` (or the window)."""
+    """Stacked ring-buffer cache sized for ``max_seq`` (or the window).
+
+    ``cfg.sparsity.kv_dtype="int8"`` stores K/V as int8 with per-token
+    f32 scale planes (``k_scale/v_scale [L, B, W]``) — the ring half of
+    the int8 KV wire (``models/attention.py``; docs/quantization.md).
+    Empty slots hold zeros with scale 1.0, so they dequantize to exact
+    zeros.  MLA quantizes only the latent ``k`` plane: its ``v`` is the
+    1-wide always-zero dummy, where a scale plane would cost more bytes
+    than it saves.
+    """
     dtype = dtype_of(cfg.dtype)
     window = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
     cache = {}
     if cfg.family == "ssm":
         return ssm_mod.make_ssm_cache(batch, cfg, cfg.n_layers, dtype)
+    kv_int8 = cfg.sparsity.kv_dtype == "int8"
+    v_int8 = kv_int8 and cfg.mla is None
     kv_dim = cfg.kv_dim()
     v_dim = 1 if cfg.mla is not None else kv_dim
     cache = {
-        "k": jnp.zeros((cfg.n_layers, batch, window, kv_dim), dtype),
-        "v": jnp.zeros((cfg.n_layers, batch, window, v_dim), dtype),
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, window, kv_dim),
+            jnp.int8 if kv_int8 else dtype,
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, window, v_dim),
+            jnp.int8 if v_int8 else dtype,
+        ),
         "pos": jnp.full((cfg.n_layers, batch, window), -1, jnp.int32),
     }
+    if kv_int8:
+        cache["k_scale"] = jnp.ones(
+            (cfg.n_layers, batch, window), jnp.float32
+        )
+    if v_int8:
+        cache["v_scale"] = jnp.ones(
+            (cfg.n_layers, batch, window), jnp.float32
+        )
     if cfg.family == "hybrid":
         ssm_cache = ssm_mod.make_ssm_cache(batch, cfg, cfg.n_layers, dtype)
         cache["ssm_state"] = ssm_cache["state"]
@@ -209,6 +234,12 @@ def cache_specs(cfg):
             "v": P(None, DATA, None, None),
             "pos": P(None, DATA, None),
         }
+    if cfg.sparsity.kv_dtype == "int8":
+        # per-token scale planes shard exactly like the slot positions
+        # (MLA's 1-wide dummy v stays native: no v_scale — see make_cache)
+        out["k_scale"] = out["pos"]
+        if cfg.mla is None:
+            out["v_scale"] = out["pos"]
     if cfg.family == "hybrid":
         s = ssm_mod.ssm_cache_specs()
         out["ssm_state"] = s["state"]
@@ -310,16 +341,17 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
         layer_p, kv = inp
         y, new_c, _ = blocks.decoder_block(
             layer_p, carry, cfg, positions,
-            cache_layer={"k": kv["k"], "v": kv["v"], "pos": new_pos_tbl},
+            cache_layer={**kv, "pos": new_pos_tbl},
             page_tables=page_tables, rope_cs=rope_cs,
         )
         return y, new_c
 
-    x, new_kv = scan_over_layers(
-        body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}), cfg
-    )
+    # every per-layer plane (k/v and, under the int8 KV wire, the
+    # k_scale/v_scale planes) scans; the shared pos table is carried once
+    kv_planes = {name: val for name, val in cache.items() if name != "pos"}
+    x, new_kv = scan_over_layers(body, x, (params["layers"], kv_planes), cfg)
     logits = _head(params, x, cfg)
-    return logits, {"k": new_kv["k"], "v": new_kv["v"], "pos": new_pos_tbl}
+    return logits, {**new_kv, "pos": new_pos_tbl}
 
 
 def prefill(params, tokens, cfg, cache=None):

@@ -13,7 +13,11 @@ is jitted too, so the decode loop does exactly one dispatch per token.
 ``ServeConfig(pack_weights=True, wire_dtype="int8")`` serves the paper's
 actual INT8 datapath: weights quantize to int8 wire at engine build
 (per-channel scales) and the packed activation hand-off runs int8 with
-the dequant fused into the matmul epilogues.
+the dequant fused into the matmul epilogues — always with per-row
+(per-token) dynamic activation scales, so int8 serving is
+batch-invariant and mode-exact.  ``kv_dtype="int8"`` additionally (or
+independently — it needs no packing) stores the KV cache as int8 with
+per-token scales in both cache backends (docs/quantization.md).
 
 ``prefill_mode="continuous"`` replaces the lock-step loop entirely:
 iteration-level continuous batching over a paged KV cache
@@ -70,12 +74,19 @@ class ServeConfig:
     ``page_size``/``max_pages``/``max_batch``/``prefill_chunk`` shape the
     paged cache and scheduler (continuous mode only).  ``max_pages``
     defaults to ``max_batch`` full-length requests plus the null page.
+
+    ``kv_dtype="int8"`` stores the KV cache (ring and paged) as int8
+    values + per-token f32 scales — ~4x fewer KV bytes than f32 — with
+    quantize-at-write/dequant-at-read handled inside
+    ``models/attention.py``.  Orthogonal to ``wire_dtype`` (it needs no
+    weight packing); see docs/quantization.md.
     """
 
     max_seq: int = 512
     temperature: float = 0.0  # 0 = greedy
     pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
     wire_dtype: str = "native"  # native | int8 (paper's int8 datapath)
+    kv_dtype: str = "native"  # native | int8 (KV cache storage)
     prefill_mode: str = "auto"  # auto | batched | stepped | continuous
     # --- continuous batching / paged KV (prefill_mode="continuous") ---
     page_size: int = 16  # tokens per KV page
@@ -84,6 +95,10 @@ class ServeConfig:
     prefill_chunk: int = 8  # max prompt tokens a request feeds per step
 
     def __post_init__(self):
+        if self.kv_dtype not in ("native", "int8"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; native|int8"
+            )
         if self.max_seq < 1:
             raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
         if self.page_size < 1:
@@ -147,7 +162,7 @@ class Engine:
     """Greedy decoding engine for a batch of prompts."""
 
     def __init__(self, params, cfg, scfg: ServeConfig):
-        self.cfg, self.scfg = cfg, scfg
+        self.scfg = scfg  # self.cfg (the effective model cfg) is set below
         if scfg.wire_dtype not in ("native", "int8"):
             raise ValueError(
                 f"unknown wire_dtype {scfg.wire_dtype!r}; native|int8"
@@ -164,6 +179,35 @@ class Engine:
         if packing:
             params = pack_params_for_serving(params, cfg, scfg.wire_dtype)
         self.params = params
+        # The engine's *effective* model config: every jitted path (one-
+        # shot, stepped, continuous) shares it.
+        #  * wire_dtype="int8" forces PER-ROW (per-token) dynamic
+        #    activation scales everywhere: the int8 datapath is
+        #    integer-exact (int32 accumulate, elementwise dequant), so
+        #    per-token scales make every request's tokens bit-identical
+        #    to its solo stepped run regardless of co-batching and make
+        #    one-shot batched prefill batch-invariant (the per-tensor
+        #    scale coupling was the last documented violation — ROADMAP).
+        #  * kv_dtype="int8" switches the KV cache (ring and paged) to
+        #    int8 storage with per-token scales (docs/quantization.md).
+        sp = cfg.sparsity
+        if scfg.wire_dtype == "int8":
+            sp = dataclasses.replace(sp, act_scale="per_row")
+        if scfg.kv_dtype != "native":
+            if cfg.family == "ssm":
+                # never let the caller believe a quantized cache is
+                # active when the family has no attention KV at all
+                # (hybrid is fine: its attention ring quantizes; the
+                # recurrent state stays native there too)
+                raise ValueError(
+                    f"kv_dtype={scfg.kv_dtype!r} has no effect on pure-"
+                    f"SSM family {cfg.family!r}: there is no attention "
+                    "KV cache to quantize (use kv_dtype='native')"
+                )
+            sp = dataclasses.replace(sp, kv_dtype=scfg.kv_dtype)
+        if sp is not cfg.sparsity:
+            cfg = dataclasses.replace(cfg, sparsity=sp)
+        self.cfg = cfg
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
         )
@@ -175,24 +219,10 @@ class Engine:
             lambda logits: jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
         )
         # continuous mode: one mixed paged step + per-row sampling at each
-        # row's own last valid chunk index.  Under the int8 wire the step
-        # quantizes activations with PER-ROW (per-token) dynamic scales:
-        # the int8 datapath is integer-exact (int32 accumulate,
-        # elementwise dequant), so per-token scales make every request's
-        # tokens bit-identical to its solo stepped run regardless of what
-        # it is co-batched with — the parity suite's exactness guarantee.
-        # (The one-shot batched wire keeps per-tensor scales and its
-        # documented batch-invariance violation — see ROADMAP.)
-        cfg_step = cfg
-        if scfg.wire_dtype == "int8":
-            cfg_step = dataclasses.replace(
-                cfg, sparsity=dataclasses.replace(
-                    cfg.sparsity, act_scale="per_row"
-                )
-            )
+        # row's own last valid chunk index
         self._paged_step = jax.jit(
             lambda p, c, t, pos, tbl, scrub: lm.paged_step(
-                p, c, t, pos, tbl, cfg_step, scrub_pages=scrub
+                p, c, t, pos, tbl, cfg, scrub_pages=scrub
             )
         )
         self._sample_at = jax.jit(

@@ -142,6 +142,14 @@ def make_paged_cache(cfg, n_pages: int, page_size: int):
     Layout mirrors :func:`repro.models.lm.make_cache` with the ``[B, W]``
     window replaced by ``[n_pages, page_size]`` pages; ``pos`` is shared
     across layers (one write per step instead of L).
+
+    ``cfg.sparsity.kv_dtype="int8"`` grows the page layout by per-token
+    f32 scale planes (``k_scale/v_scale [L, n_pages, page_size]``): K/V
+    quantize at write time (``attention.paged_update``) and dequantize in
+    the ``paged_read`` gather.  Null-page-0 and recycled-page scrub
+    semantics are unchanged — masking still derives solely from ``pos``,
+    and stale int8 values/scales on a recycled page dequantize to finite
+    garbage whose softmax terms are exactly zero.
     """
     from repro.models.common import dtype_of
 
@@ -150,11 +158,45 @@ def make_paged_cache(cfg, n_pages: int, page_size: int):
             f"paged KV cache unsupported for recurrent family "
             f"{cfg.family!r}: only attention ring state pages"
         )
+    kv_int8 = cfg.sparsity.kv_dtype == "int8"
+    # MLA quantizes only the latent k plane: its v is the 1-wide
+    # always-zero dummy, where a scale plane would cost more than it saves
+    v_int8 = kv_int8 and cfg.mla is None
     dtype = dtype_of(cfg.dtype)
     kv_dim = cfg.kv_dim()
     v_dim = 1 if cfg.mla is not None else kv_dim
-    return {
-        "k": jnp.zeros((cfg.n_layers, n_pages, page_size, kv_dim), dtype),
-        "v": jnp.zeros((cfg.n_layers, n_pages, page_size, v_dim), dtype),
+    cache = {
+        "k": jnp.zeros(
+            (cfg.n_layers, n_pages, page_size, kv_dim),
+            jnp.int8 if kv_int8 else dtype,
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, n_pages, page_size, v_dim),
+            jnp.int8 if v_int8 else dtype,
+        ),
         "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
     }
+    if kv_int8:
+        cache["k_scale"] = jnp.ones(
+            (cfg.n_layers, n_pages, page_size), jnp.float32
+        )
+    if v_int8:
+        cache["v_scale"] = jnp.ones(
+            (cfg.n_layers, n_pages, page_size), jnp.float32
+        )
+    return cache
+
+
+def cache_nbytes(cache) -> int:
+    """Total bytes of a cache pytree's arrays (bench/report helper —
+    the KV-bytes ratio rows in ``BENCH_kernels.json`` come from here).
+    Works on concrete arrays and ``jax.eval_shape`` abstract leaves, so
+    full-size model caches can be measured without allocating them."""
+    import math
+
+    import jax
+
+    return sum(
+        math.prod(leaf.shape) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(cache)
+    )

@@ -18,6 +18,14 @@ already-running requests — so on-demand ``ensure`` growth during decode
 can never fail mid-flight (no preemption needed), while pages are still
 allocated incrementally as positions are written.
 
+The scheduler is storage-dtype agnostic: it plans page ids and token
+positions only, so the int8 KV wire (``ServeConfig.kv_dtype="int8"`` —
+int8 pages + per-token scale planes, docs/quantization.md) changes
+nothing here.  Page recycling already covers the scale planes: the
+``scrub_pages`` list invalidates recycled pages' *positions*, and
+masking derives solely from positions, so stale int8 values/scales can
+never leak into a new owner's window.
+
 Token-stream contract (mirrors the stepped engine exactly):
   * prompt positions ``0..s0-1`` are written during (chunked) prefill;
     the chunk containing position ``s0-1`` samples the first output token,

@@ -1,0 +1,265 @@
+"""Unit + property tests for the int8 KV-cache wire.
+
+The quantize-at-write/dequant-at-read helpers (``core.quant.quantize_rows``
+/ ``dequantize_rows``, surfaced as ``attention.quantize_kv`` /
+``dequantize_kv`` / ``kv_roundtrip``) carry the whole exactness argument
+of the int8 KV cache (docs/quantization.md): every cached token row
+quantizes on its own amax, so a write followed by a read is a pure
+per-row function of the written values — identical across the ring and
+paged backends, across batch compositions, and across serving modes.
+The serving-level parity suite (tests/test_serve.py) builds on the row
+contracts pinned here.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st  # hypothesis-or-skip shim
+
+from repro import configs
+from repro.core import quant
+from repro.models import attention, lm
+from repro.serve import paged_cache
+
+
+def rnd(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ------------------------------------------------------ row-quant properties
+
+
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 8),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+    mag=st.floats(1e-3, 1e3),
+)
+@settings(max_examples=40, deadline=None)
+def test_prop_quantize_rows_roundtrip_bounded(b, t, d, seed, mag):
+    """Per-row round-trip error is bounded by half of THAT ROW's
+    quantization step — a large-magnitude token can never widen another
+    token's error (the defect per-tensor scales have)."""
+    x = rnd((b, t, d), seed, mag)
+    # make row magnitudes wildly different so a shared scale would fail
+    x = x * jnp.asarray(
+        np.logspace(-2, 2, b * t).reshape(b, t, 1).astype(np.float32)
+    )
+    q, scale = quant.quantize_rows(x)
+    assert q.dtype == jnp.int8
+    assert scale.shape == (b, t)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    deq = quant.dequantize_rows(q, scale)
+    err = np.abs(np.array(deq) - np.array(x, np.float32))
+    bound = np.array(scale)[..., None] * 0.5 + 1e-6 * np.abs(np.array(x))
+    assert (err <= bound + 1e-12).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_kv_roundtrip_idempotent(seed):
+    """The row grid is a fixpoint: round-tripping a round-tripped tensor
+    is lossless (what re-reading a cache slot must guarantee)."""
+    x = rnd((2, 4, 16), seed)
+    once = attention.kv_roundtrip(x)
+    np.testing.assert_array_equal(
+        np.array(attention.kv_roundtrip(once)), np.array(once)
+    )
+
+
+def test_zero_rows_quantize_exactly():
+    """Empty cache slots (all-zero rows) get scale 1.0 and stay exact
+    zeros through the round-trip — masked slots must never dequantize to
+    garbage."""
+    x = jnp.zeros((2, 3, 8), jnp.float32)
+    q, scale = attention.quantize_kv(x)
+    np.testing.assert_array_equal(np.array(q), 0)
+    np.testing.assert_array_equal(np.array(scale), 1.0)
+    np.testing.assert_array_equal(
+        np.array(attention.dequantize_kv(q, scale, jnp.float32)), 0.0
+    )
+
+
+# --------------------------------------------------------- ring write/read
+
+
+def test_ring_fill_and_update_write_quantized_read_dequantized():
+    """fill_ring (prefill) and _update_ring (decode) both store the
+    per-row quantization of their input, and ring_window reads back
+    exactly kv_roundtrip of the written rows — the write/read boundary
+    the serving parity rests on."""
+    b, w, d, s = 2, 8, 16, 5
+    layer = {
+        "k": jnp.zeros((b, w, d), jnp.int8),
+        "v": jnp.zeros((b, w, d), jnp.int8),
+        "pos": jnp.full((b, w), -1, jnp.int32),
+        "k_scale": jnp.ones((b, w), jnp.float32),
+        "v_scale": jnp.ones((b, w), jnp.float32),
+    }
+    k_new, v_new = rnd((b, s, d), 0), rnd((b, s, d), 1)
+    filled = attention.fill_ring(layer, k_new, v_new, s)
+    assert filled["k"].dtype == jnp.int8
+    k_win, v_win = attention.ring_window(filled, jnp.float32)
+    np.testing.assert_array_equal(
+        np.array(k_win[:, :s]), np.array(attention.kv_roundtrip(k_new))
+    )
+    np.testing.assert_array_equal(
+        np.array(v_win[:, :s]), np.array(attention.kv_roundtrip(v_new))
+    )
+    np.testing.assert_array_equal(np.array(filled["pos"][:, :s][0]), np.arange(s))
+    # decode step appends one row with its own scale
+    k1, v1 = rnd((b, 1, d), 2), rnd((b, 1, d), 3)
+    upd = attention._update_ring(filled, k1, v1, jnp.int32(s), w)
+    k_win, v_win = attention.ring_window(upd, jnp.float32)
+    np.testing.assert_array_equal(
+        np.array(k_win[:, s : s + 1]), np.array(attention.kv_roundtrip(k1))
+    )
+    np.testing.assert_array_equal(
+        np.array(v_win[:, s : s + 1]), np.array(attention.kv_roundtrip(v1))
+    )
+    # earlier rows untouched by the append
+    np.testing.assert_array_equal(
+        np.array(k_win[:, :s]), np.array(attention.kv_roundtrip(k_new))
+    )
+
+
+def test_ring_native_unchanged():
+    """kv_dtype='native' caches have no scale planes and ring_window is
+    the identity — the f32 wire must be byte-for-byte what it was."""
+    b, w, d = 2, 8, 16
+    cache = attention.make_kv_cache(b, w, d, 1, jnp.float32)
+    assert set(cache) == {"k", "v", "pos"}  # bare symmetric ring
+    layer = {k: v[0] for k, v in cache.items()}
+    k_new = rnd((b, 4, d), 0)
+    filled = attention.fill_ring(layer, k_new, k_new, 4)
+    k_win, v_win = attention.ring_window(filled, jnp.float32)
+    np.testing.assert_array_equal(np.array(k_win[:, :4]), np.array(k_new))
+
+
+# -------------------------------------------------------- paged write/read
+
+
+def test_paged_update_read_roundtrip_int8():
+    """paged_update quantizes at write (values + per-token scales through
+    the same flat slot) and paged_read dequantizes in the gather — the
+    gathered logical window equals kv_roundtrip of the written rows, and
+    padding rows still land on the null page."""
+    ps, d, n_pages = 4, 16, 4
+    cache = {
+        "k": jnp.zeros((n_pages, ps, d), jnp.int8),
+        "v": jnp.zeros((n_pages, ps, d), jnp.int8),
+        "k_scale": jnp.ones((n_pages, ps), jnp.float32),
+        "v_scale": jnp.ones((n_pages, ps), jnp.float32),
+    }
+    pos_tbl = jnp.full((n_pages, ps), -1, jnp.int32)
+    tables = jnp.asarray([[1, 3]], jnp.int32)  # non-contiguous on purpose
+    s = 6
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    k_new, v_new = rnd((1, s, d), 0, 3.0), rnd((1, s, d), 1, 0.1)
+    pos_tbl = attention.paged_update_pos(pos_tbl, positions, tables)
+    new = attention.paged_update(cache, k_new, v_new, positions, tables)
+    assert new["k"].dtype == jnp.int8
+    k_win, v_win, pos_win = attention.paged_read(
+        new, pos_tbl, tables, dtype=jnp.float32
+    )
+    np.testing.assert_array_equal(
+        np.array(k_win[:, :s]), np.array(attention.kv_roundtrip(k_new))
+    )
+    np.testing.assert_array_equal(
+        np.array(v_win[:, :s]), np.array(attention.kv_roundtrip(v_new))
+    )
+    np.testing.assert_array_equal(np.array(pos_win[0, :s]), np.arange(s))
+    np.testing.assert_array_equal(np.array(pos_win[0, s:]), -1)
+    # a padding write (position -1) routes to the null page, not page 1/3
+    pad = attention.paged_update(
+        new, rnd((1, 1, d), 2), rnd((1, 1, d), 3),
+        jnp.asarray([[-1]], jnp.int32), tables,
+    )
+    np.testing.assert_array_equal(np.array(pad["k"][1]), np.array(new["k"][1]))
+    np.testing.assert_array_equal(np.array(pad["k"][3]), np.array(new["k"][3]))
+
+
+# ----------------------------------------------------- cache layouts, bytes
+
+
+def _small_cfg(arch="granite_3_8b", **kw):
+    cfg = configs.get_config(arch, smoke=True)
+    over = dict(vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32")
+    over.update(kw)
+    return dataclasses.replace(cfg, **over)
+
+
+def _with_kv_int8(cfg):
+    return dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, kv_dtype="int8")
+    )
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+def test_int8_cache_layouts_and_bytes_ratio(arch):
+    """Ring and paged int8 caches carry int8 k/v plus per-token f32 scale
+    planes, and shrink KV bytes ~4x vs the f32 caches (the
+    `int8_kv_bytes_ratio` row in BENCH_kernels.json).  MLA quantizes only
+    the latent k plane — its 1-wide always-zero dummy v stays native
+    (a scale plane there would cost more bytes than it saves)."""
+    cfg = _small_cfg(arch)
+    cfg8 = _with_kv_int8(cfg)
+    mla = cfg.mla is not None
+    ring_f, ring_8 = lm.make_cache(cfg, 2, 32), lm.make_cache(cfg8, 2, 32)
+    paged_f = paged_cache.make_paged_cache(cfg, 9, 8)
+    paged_8 = paged_cache.make_paged_cache(cfg8, 9, 8)
+    for c8, cf in ((ring_8, ring_f), (paged_8, paged_f)):
+        assert c8["k"].dtype == jnp.int8
+        assert c8["k_scale"].shape == c8["k"].shape[:-1]
+        np.testing.assert_array_equal(np.array(c8["k_scale"]), 1.0)
+        if mla:
+            assert "v_scale" not in c8
+            assert c8["v"].dtype == cf["v"].dtype
+            assert set(cf) | {"k_scale"} == set(c8)
+        else:
+            assert c8["v"].dtype == jnp.int8
+            assert c8["v_scale"].shape == c8["v"].shape[:-1]
+            assert set(cf) | {"k_scale", "v_scale"} == set(c8)
+    # bytes: count only k/v(+scales) — pos is identical bookkeeping
+    def kv_bytes(c):
+        return paged_cache.cache_nbytes(
+            {n: c[n] for n in c if n != "pos"}
+        )
+
+    for c8, cf in ((ring_8, ring_f), (paged_8, paged_f)):
+        ratio = kv_bytes(cf) / kv_bytes(c8)
+        # f32 -> int8 + one f32 scale per row: 4x asymptotically, a bit
+        # less at finite row width (kv_dim D gives 4D / (D + 4))
+        assert 3.0 < ratio <= 4.0
+
+
+def test_kv_dtype_validation():
+    """Unknown kv_dtype fails loudly at config construction — both on the
+    model-side SparsityConfig and the serving-side ServeConfig."""
+    from repro.core.sparsity import SparsityConfig
+    from repro.serve.engine import ServeConfig
+
+    with pytest.raises(ValueError, match="kv_dtype"):
+        SparsityConfig(kv_dtype="int4")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeConfig(kv_dtype="fp8")
+    assert SparsityConfig(kv_dtype="int8").kv_dtype == "int8"
+
+
+def test_kv_int8_rejected_for_pure_ssm():
+    """kv_dtype='int8' on a family with no attention KV must fail loudly
+    at engine construction, not silently serve a full-precision cache
+    (the same never-lie principle the int8 weight wire enforces)."""
+    import jax
+
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = _small_cfg("mamba2_130m")
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="no attention KV"):
+        Engine(params, cfg, ServeConfig(kv_dtype="int8"))

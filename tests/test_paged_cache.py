@@ -204,12 +204,13 @@ def test_paged_write_read_roundtrip_matches_ring_semantics():
             pos_tbl = attention.paged_update_pos(
                 pos_tbl, jnp.asarray(positions), jnp.asarray(tables)
             )
-            k_layer, v_layer = attention.paged_update(
-                k_layer, v_layer, jnp.asarray(newk), jnp.asarray(newk),
-                jnp.asarray(positions), jnp.asarray(tables),
+            kv = attention.paged_update(
+                {"k": k_layer, "v": v_layer}, jnp.asarray(newk),
+                jnp.asarray(newk), jnp.asarray(positions), jnp.asarray(tables),
             )
+            k_layer, v_layer = kv["k"], kv["v"]
     k_win, v_win, pos_win = attention.paged_read(
-        k_layer, v_layer, pos_tbl, jnp.asarray(tables)
+        {"k": k_layer, "v": v_layer}, pos_tbl, jnp.asarray(tables)
     )
     assert k_win.shape == (2, p_max * ps, kvd)
     for r in lens:
