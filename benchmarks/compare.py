@@ -37,6 +37,11 @@ TRACKED_RATIOS = (
     "int8_weight_bytes_ratio",
     "int8_vs_bf16_weight_bytes_ratio",
     "int8_kv_bytes_ratio",
+    # paged decode attention: HBM bytes the gather path moves for the
+    # attention window / bytes the fused page-table-walk kernel moves
+    # (exact layout functions — kernel_bench.paged_attn_window_bytes)
+    "paged_attn_window_bytes_ratio",
+    "paged_attn_window_bytes_ratio_int8",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get

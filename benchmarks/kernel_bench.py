@@ -181,6 +181,130 @@ def bench_kv_quant(smoke: bool = False):
     return rows, round(us_q + us_dq, 1)
 
 
+def paged_attn_window_bytes(
+    b: int, p: int, ps: int, dk: int, dv: int,
+    wire_bytes: int, compute_bytes: int, n_scale_planes: int,
+):
+    """HBM bytes the attention *window* costs per paged step, both paths.
+
+    Fused (in-kernel page-table walk): each request's pages stream from
+    HBM exactly once, in wire format — values, per-token scale planes
+    (int8 wire), and the slot-position words.
+
+    Gather (``paged_read`` + ``mha``): the same page reads, PLUS the
+    dense ``[B, P*ps, D]`` logical window materialized in compute dtype
+    (one write) and read back by ``mha`` (one read) — the separate
+    dequant pass under the int8 wire is part of that same window
+    round-trip (dequantization happens into the materialized copy).
+
+    Query/output tensors are identical on both paths and excluded.
+    Returns ``(gather_bytes, fused_bytes)`` — an exact function of the
+    layout, so the derived ratio is deterministic and gated
+    (``benchmarks/compare.py`` TRACKED_RATIOS).
+    """
+    tokens = b * p * ps
+    page_reads = tokens * (
+        (dk + dv) * wire_bytes + n_scale_planes * 4 + 4  # values+scales+pos
+    )
+    window = tokens * ((dk + dv) * compute_bytes + 4)  # dense k/v + pos
+    return page_reads + 2 * window, page_reads
+
+
+def bench_paged_attn(smoke: bool = False):
+    """Paged decode attention: gather (paged_read + mha) vs the fused
+    page-table-walk formulation, plus the deterministic window-bytes
+    ratios the fusion buys.
+
+    µs rows time the **jnp forms** of both paths (the Pallas kernel
+    targets TPU; ``ref.paged_attn_ref`` mirrors its online-softmax page
+    tiling and is the timeable CPU proxy, exactly like the DBB rows).
+    REPRO_AUTOTUNE=1 additionally times the two implementations against
+    each other and caches the winner under the autotune ``paged_attn``
+    kind (kernels/autotune.py).
+    """
+    from repro import configs
+    from repro.kernels import ref as kref
+    from repro.models import attention
+
+    # timing shape: a small decode step (CPU-friendly)
+    b, p_cnt, ps, kvh, dh = 4, 4, 16, 4, 64
+    kvd = kvh * dh
+    reps = 2 if smoke else 5
+    rng = np.random.default_rng(5)
+    cache = {
+        "k": jnp.asarray(rng.normal(size=(b * p_cnt + 1, ps, kvd)).astype(np.float32)),
+        "v": jnp.asarray(rng.normal(size=(b * p_cnt + 1, ps, kvd)).astype(np.float32)),
+    }
+    tables = jnp.asarray(
+        np.arange(1, b * p_cnt + 1, dtype=np.int32).reshape(b, p_cnt)
+    )
+    pos = np.tile(np.arange(p_cnt * ps, dtype=np.int32), (b, 1))
+    pos_tbl = attention.paged_update_pos(
+        jnp.full((b * p_cnt + 1, ps), -1, jnp.int32), jnp.asarray(pos), tables
+    )
+    q = jnp.asarray(rng.normal(size=(b, 1, 2 * kvh, dh)).astype(np.float32))
+    q_pos = jnp.full((b, 1), p_cnt * ps - 1, jnp.int32)
+
+    def gather(k_pages, v_pages):
+        c = {"k": k_pages, "v": v_pages}
+        k_win, v_win, pos_win = attention.paged_read(
+            c, pos_tbl, tables, dtype=jnp.float32
+        )
+        t = k_win.shape[1]
+        return attention.mha(
+            q, k_win.reshape(b, t, kvh, dh), v_win.reshape(b, t, kvh, dh),
+            q_pos, pos_win, window=None, chunk=None,
+        )
+
+    def fused(k_pages, v_pages):
+        return kref.paged_attn_ref(
+            q, k_pages, v_pages, pos_tbl, tables, q_pos, kv_heads=kvh
+        )
+
+    f_gather = jax.jit(gather)
+    f_fused = jax.jit(fused)
+    us_gather = _time(f_gather, cache["k"], cache["v"], n=reps)
+    us_fused = _time(f_fused, cache["k"], cache["v"], n=reps)
+
+    if autotune.autotune_enabled():
+        from repro.kernels.paged_attn import paged_attn_fused
+
+        # jit BOTH candidates: an eager fused call would pay per-op
+        # dispatch the jitted gather path doesn't, biasing the timing
+        f_kernel = jax.jit(
+            lambda k_pages, v_pages: paged_attn_fused(
+                q, k_pages, v_pages, pos_tbl, tables, q_pos, kv_heads=kvh
+            )
+        )
+
+        def run(impl):
+            fn = f_gather if impl == "gather" else f_kernel
+            return lambda: fn(cache["k"], cache["v"])
+
+        sg = q.shape[1] * (q.shape[2] // kvh)  # query rows per kv head
+        autotune.autotune_paged_attn(run, b, sg, ps, dh)
+
+    # deterministic window-bytes ratios at the REAL model's kv_dim and a
+    # serving-scale window (tiny timing rows would understate them)
+    full = configs.get_config("granite_3_8b")
+    kvd_full = full.kv_dim()
+    shape = dict(b=8, p=32, ps=16, dk=kvd_full, dv=kvd_full)
+    g_f32, f_f32 = paged_attn_window_bytes(
+        **shape, wire_bytes=4, compute_bytes=4, n_scale_planes=0
+    )
+    g_i8, f_i8 = paged_attn_window_bytes(
+        **shape, wire_bytes=1, compute_bytes=4, n_scale_planes=2
+    )
+    rows = [
+        {"impl": "paged_attn_gather", "us": round(us_gather, 1)},
+        {"impl": "paged_attn_fused", "us": round(us_fused, 1)},
+        {"paged_attn_window_bytes_ratio": round(g_f32 / f_f32, 3)},
+        {"paged_attn_window_bytes_ratio_int8": round(g_i8 / f_i8, 3)},
+        {"shape": [b, p_cnt, ps, kvh, dh], "ratio_kv_dim": kvd_full},
+    ]
+    return rows, round(g_f32 / f_f32, 3)
+
+
 def bench_dap_prune(smoke: bool = False):
     shape = (128, 1024) if smoke else (512, 4096)
     reps = 2 if smoke else 5

@@ -56,6 +56,9 @@ def main() -> None:
     jobs.append(("kernel_dap_prune", kernel_bench.bench_dap_prune, {"smoke": smoke}))
     # int8 KV-cache write/read helpers (serve_bench has the end-to-end rows)
     jobs.append(("kernel_kv_quant", kernel_bench.bench_kv_quant, {"smoke": smoke}))
+    # paged decode attention: gather vs fused page-table walk + the
+    # deterministic window-bytes ratios the fusion buys
+    jobs.append(("kernel_paged_attn", kernel_bench.bench_paged_attn, {"smoke": smoke}))
     # serving throughput: continuous batching vs one-shot batched prefill
     from benchmarks import serve_bench
 

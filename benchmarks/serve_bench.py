@@ -112,14 +112,23 @@ def bench_serve(smoke: bool = False):
     ).astype(np.int32)
 
     oneshot = Engine(params, cfg, ServeConfig(max_seq=64, prefill_mode="batched"))
-    cont = Engine(params, cfg, ServeConfig(
+    ckw = dict(
         prefill_mode="continuous", max_seq=64,
         page_size=16, max_batch=b, prefill_chunk=8,
-    ))
+    )
+    cont = Engine(params, cfg, ServeConfig(**ckw))
+    # the fused page-table-walk engine: on this CPU host the kernel runs
+    # through the Pallas interpreter, so this row tracks the *wiring*
+    # cost of the fused path, not TPU performance (the deterministic
+    # paged_attn_window_bytes_ratio rows in kernel_paged_attn carry the
+    # HBM-traffic claim; docs/perf.md)
+    cont_fused = Engine(params, cfg, ServeConfig(paged_attn="fused", **ckw))
     oneshot.generate(prompts, n_new)  # warmup/compile
     cont.generate(prompts, n_new)
+    cont_fused.generate(prompts, n_new)
     s_one = _time_once(lambda: oneshot.generate(prompts, n_new), passes)
     s_cont = _time_once(lambda: cont.generate(prompts, n_new), passes)
+    s_fused = _time_once(lambda: cont_fused.generate(prompts, n_new), passes)
     tok = b * n_new
     tps_one, tps_cont = tok / s_one, tok / s_cont
     kv_rows, _ = bench_kv_cache(cfg, params, passes)
@@ -128,6 +137,9 @@ def bench_serve(smoke: bool = False):
          "tokens_per_s": round(tps_one, 1)},
         {"impl": "serve_continuous", "us": round(s_cont * 1e6, 1),
          "tokens_per_s": round(tps_cont, 1)},
+        {"impl": "serve_continuous_paged_attn_fused",
+         "us": round(s_fused * 1e6, 1),
+         "tokens_per_s": round(tok / s_fused, 1)},
         # timing-derived, reported not gated (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
         *kv_rows,

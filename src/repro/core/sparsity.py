@@ -44,6 +44,15 @@ class SparsityConfig:
     # paged backends both; see docs/quantization.md).  Orthogonal to the
     # weight/activation wire: it applies to dense serving too.
     kv_dtype: str = "native"
+    # Paged decode-attention implementation (continuous serving):
+    # "gather" materializes each request's logical window via
+    # attention.paged_read before mha; "fused" walks the page table
+    # in-kernel with online softmax and fused int8-KV dequant
+    # (kernels/paged_attn.py — never materializes the window); "auto"
+    # resolves per shape via kernels/autotune.py (cache → backend
+    # heuristic: fused on TPU, gather elsewhere).  Serving knob:
+    # ServeConfig.paged_attn (docs/serving.md).
+    paged_attn: str = "auto"
 
     def __post_init__(self):
         if self.mode not in ("dense", "wdbb", "awdbb"):
@@ -55,6 +64,10 @@ class SparsityConfig:
         if self.kv_dtype not in ("native", "int8"):
             raise ValueError(
                 f"unknown kv_dtype {self.kv_dtype!r}; native|int8"
+            )
+        if self.paged_attn not in ("auto", "gather", "fused"):
+            raise ValueError(
+                f"unknown paged_attn {self.paged_attn!r}; auto|gather|fused"
             )
 
     @property

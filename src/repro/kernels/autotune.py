@@ -181,3 +181,100 @@ def autotune(
 
 def autotune_enabled() -> bool:
     return os.environ.get("REPRO_AUTOTUNE", "0") == "1"
+
+
+# ------------------------------------------------- paged-attention kind
+#
+# The paged decode-attention kernel (kernels/paged_attn.py) has no free
+# tile dimensions — its blocks are pinned by (page_size, head_dim) — so
+# its tunable is the *implementation*: "gather" (paged_read + mha, the
+# XLA-fused jnp path) vs "fused" (the in-kernel page-table walk).  The
+# choice shares the same three-layer resolution as the tile kinds:
+# benchmark cache (exact shape hit, persisted via REPRO_AUTOTUNE_CACHE)
+# → backend heuristic → gather.  Cache keys reuse the 6-tuple layout
+# ((kind, b, sg, ps, dk, 0)) so one JSON file serves both kinds; values
+# are 1-tuples of the impl name.
+
+PAGED_ATTN_IMPLS = ("gather", "fused")
+
+
+def heuristic_paged_attn_impl(backend: Optional[str] = None) -> str:
+    """Backend heuristic: the Pallas walk wins on TPU (it exists to cut
+    HBM traffic the XLA gather path must pay); on CPU the kernel only
+    runs through the interpreter, so the jnp gather path stays the
+    default — "fused" remains available explicitly (tests/CI parity)."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return "fused" if backend == "tpu" else "gather"
+
+
+def get_paged_attn_impl(b: int, sg: int, ps: int, dk: int) -> str:
+    """Resolve the paged-attention implementation for a problem shape:
+    benchmark cache first, then the backend heuristic.
+
+    The cache key carries no backend, so a ``"fused"`` verdict is only
+    honored where the compiled kernel actually runs (TPU): replaying a
+    TPU-tuned cache file on a CPU/GPU host must not route ``"auto"``
+    serving through the Pallas interpreter.  ``"gather"`` hits are
+    backend-agnostic (the jnp path runs everywhere).
+    """
+    _load_cache()
+    hit = _CACHE.get(("paged_attn", b, sg, ps, dk, 0))
+    if hit is not None and hit[0] in PAGED_ATTN_IMPLS:
+        if hit[0] != "fused":
+            return hit[0]
+        import jax
+
+        if jax.default_backend() == "tpu":
+            return hit[0]
+    return heuristic_paged_attn_impl()
+
+
+def autotune_paged_attn(
+    run: Callable[[str], Callable[[], object]],
+    b: int,
+    sg: int,
+    ps: int,
+    dk: int,
+    reps: int = 3,
+) -> str:
+    """Time gather vs fused for one shape and cache the winner.
+
+    ``run(impl)`` returns a nullary callable executing that
+    implementation (closed over the operands) — same contract as
+    :func:`autotune`.  The winner is cached only when EVERY candidate
+    ran: the cache key carries no backend, so a partial sweep (e.g. a
+    CPU host where the compiled kernel cannot run) must answer from the
+    heuristic without persisting — otherwise a CPU-produced cache file
+    would pin "gather" on a later TPU host, the same capable-host rule
+    :func:`autotune` applies to failed tile sweeps.
+    """
+    import jax
+
+    _load_cache()
+    key = ("paged_attn", b, sg, ps, dk, 0)
+    if key in _CACHE and _CACHE[key][0] in PAGED_ATTN_IMPLS:
+        return _CACHE[key][0]
+    best, best_t, timed = None, float("inf"), 0
+    for impl in PAGED_ATTN_IMPLS:
+        try:
+            fn = run(impl)
+            jax.block_until_ready(fn())  # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn())
+            dt = (time.perf_counter() - t0) / reps
+        except Exception:  # impl unavailable on this backend: skip
+            continue
+        timed += 1
+        if dt < best_t:
+            best, best_t = impl, dt
+    if timed < len(PAGED_ATTN_IMPLS):
+        # incomplete comparison: don't let this host's limitation become
+        # a cached verdict for a capable one
+        return best if best is not None else heuristic_paged_attn_impl()
+    _CACHE[key] = (best,)
+    _save_cache()
+    return best

@@ -209,6 +209,107 @@ def dap_prune_ref(x: jax.Array, nnz: int, bz: int = dbb.DEFAULT_BZ):
     return pruned, bitmask
 
 
+# ------------------------------------------------------ paged attention
+
+
+def paged_attn_ref(
+    q: jax.Array,  # [B, S, H, Dk]
+    k_pages: jax.Array,  # [N, PS, KV*Dk] (latent: [N, PS, Dk], KV == 1)
+    v_pages: Optional[jax.Array],  # [N, PS, KV*Dv]; None when latent_dv set
+    pos_tbl: jax.Array,  # [N, PS] int32
+    page_tables: jax.Array,  # [B, P] int32
+    q_pos: jax.Array,  # [B, S] int32
+    *,
+    kv_heads: int,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    latent_dv: Optional[int] = None,
+    out_dtype=None,
+):
+    """jnp oracle for :func:`repro.kernels.paged_attn.paged_attn_fused`,
+    mirroring the kernel's online-softmax **page tiling**: a ``fori_loop``
+    streams one page per step (gathered by id across the batch), applies
+    the same position-derived masking, dequantizes int8 pages in the load
+    (per-token scale column), and carries the flash-style ``(acc, m, l)``
+    statistics — the ``[B, P*PS, D]`` window is never materialized.  This
+    is also the shardable/timeable jnp hot path the CPU benchmarks use
+    (``kernel_bench.bench_paged_attn``), exactly like the other oracles
+    in this module.
+    """
+    import math
+
+    b, s, h, dk = q.shape
+    g = h // kv_heads
+    sg = s * g
+    n_pages, ps = pos_tbl.shape
+    p_cnt = page_tables.shape[1]
+    latent = latent_dv is not None
+    dv = latent_dv if latent else v_pages.shape[-1] // kv_heads
+    out_dtype = out_dtype or q.dtype
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(dk)
+    neg_inf = -1e30  # models/attention.NEG_INF (finite: NaN-free rescale)
+
+    cdtype = q.dtype
+    q_r = q.reshape(b, s, kv_heads, g, dk).transpose(0, 2, 1, 3, 4)
+    q_r = q_r.reshape(b, kv_heads, sg, dk)
+    k_r = k_pages.reshape(n_pages, ps, kv_heads, dk)
+    v_r = None if latent else v_pages.reshape(n_pages, ps, kv_heads, dv)
+
+    def body(p, carry):
+        acc, m, l = carry
+        pid = page_tables[:, p]  # [B]
+        k_p = k_r[pid]  # [B, PS, KV, Dk]
+        if k_scale is not None:
+            k_p = (
+                k_p.astype(jnp.float32) * k_scale[pid][:, :, None, None]
+            ).astype(cdtype)
+        logits = (
+            jnp.einsum(
+                "bkxd,bpkd->bkxp", q_r, k_p,
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # [B, KV, SG, PS]
+        kpos = pos_tbl[pid]  # [B, PS]
+        valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= q_pos[:, :, None])
+        if window is not None:
+            valid &= kpos[:, None, :] > (q_pos[:, :, None] - window)
+        bias = jnp.where(valid, 0.0, neg_inf).astype(jnp.float32)  # [B, S, PS]
+        logits = logits.reshape(b, kv_heads, s, g, ps) + bias[:, None, :, None, :]
+        logits = logits.reshape(b, kv_heads, sg, ps)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        alpha = jnp.exp(m - m_new)
+        probs = jnp.exp(logits - m_new)
+        if latent:
+            v_p = k_p[..., :dv]  # MLA: v is the latent prefix of k
+        else:
+            v_p = v_r[pid]
+            if v_scale is not None:
+                v_p = (
+                    v_p.astype(jnp.float32) * v_scale[pid][:, :, None, None]
+                ).astype(cdtype)
+        pv = jnp.einsum(
+            "bkxp,bpkv->bkxv", probs.astype(v_p.dtype), v_p,
+            preferred_element_type=jnp.float32,
+        )
+        return (
+            acc * alpha + pv,
+            m_new,
+            alpha * l + jnp.sum(probs, axis=-1, keepdims=True),
+        )
+
+    acc = jnp.zeros((b, kv_heads, sg, dv), jnp.float32)
+    m = jnp.full((b, kv_heads, sg, 1), neg_inf, jnp.float32)
+    l = jnp.zeros((b, kv_heads, sg, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, p_cnt, body, (acc, m, l))
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.reshape(b, kv_heads, s, g, dv).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s, h, dv).astype(out_dtype)
+
+
 def pack_weight_for_kernel(w: jax.Array, cfg: dbb.DBBConfig):
     """Dense ``w [K, N]`` -> kernel wire format (prunes if needed).
 

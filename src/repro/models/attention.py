@@ -18,6 +18,14 @@ write sites (:func:`fill_ring`, :func:`_update_ring`,
 :func:`paged_update`) quantize row-locally, which keeps a token's stored
 bytes independent of its co-batch (the batch-invariance argument of
 ``docs/quantization.md``).
+
+Paged attention has two interchangeable implementations selected by
+``SparsityConfig.paged_attn`` (see :func:`_paged_attn_impl`): the
+**gather** path (:func:`paged_read` + :func:`mha` / absorbed MLA) that
+materializes each request's logical window, and the **fused** Pallas
+kernel (``repro.kernels.paged_attn``) that walks the page table
+in-kernel with online softmax and int8 dequant fused into the page load
+— same masking invariants, no materialized window (docs/serving.md).
 """
 
 from __future__ import annotations
@@ -223,21 +231,32 @@ def paged_update_pos(pos_tbl, positions, page_tables):
     return pos_tbl.reshape(-1).at[flat].set(vals).reshape(pos_tbl.shape)
 
 
-def paged_read(cache_layer, pos_tbl, page_tables, dtype=jnp.float32):
+def paged_read(cache_layer, pos_tbl, page_tables, dtype=None):
     """Gather each request's pages into a contiguous logical window.
 
     Returns (k [B, P*PS, Dk], v [B, P*PS, Dv], pos [B, P*PS]) — the same
     (values, slot-positions) interface the ring presents, so `mha`'s
     position-derived masking needs no paged special case.  This is the
-    paged cache's read boundary: int8 caches dequantize here (gathered
-    values × gathered per-token scales, output in compute ``dtype``), so
-    nothing above this call sees the wire format.  Stale values/scales on
-    recycled pages are harmless — masking derives from the (scrubbed)
-    position table, and dequantized garbage is finite, so its softmax
-    terms are exactly zero.
+    paged cache's read boundary: the window is delivered in the compute
+    ``dtype`` — int8 planes dequantize to it (gathered values × gathered
+    per-token scales) and native planes are cast (a no-op when the
+    caller passes the model compute dtype, which every model path does:
+    a bf16 config must not silently upcast its gathered window to f32
+    and double the materialized bytes).  ``dtype=None`` keeps the
+    historical f32 default for standalone/bench/test use.  Stale
+    values/scales on recycled pages are harmless — masking derives from
+    the (scrubbed) position table, and dequantized garbage is finite, so
+    its softmax terms are exactly zero.
+
+    The gather itself is one of two paged-attention implementations: the
+    fused Pallas kernel (``kernels/paged_attn.py``) walks the page table
+    in-kernel and never materializes this window — selection happens in
+    the forward passes below via ``SparsityConfig.paged_attn``.
     """
     b, p = page_tables.shape
     ps = cache_layer["k"].shape[1]
+    if dtype is None:
+        dtype = jnp.float32
 
     def read(name):
         c = cache_layer[name]
@@ -246,10 +265,26 @@ def paged_read(cache_layer, pos_tbl, page_tables, dtype=jnp.float32):
         if sname in cache_layer:
             s_win = cache_layer[sname][page_tables].reshape(b, p * ps)
             win = dequantize_kv(win, s_win, dtype)
+        else:
+            win = win.astype(dtype)
         return win
 
     pos_win = pos_tbl[page_tables].reshape(b, p * ps)
     return read("k"), read("v"), pos_win
+
+
+def _paged_attn_impl(sp, b: int, sg: int, ps: int, dk: int) -> str:
+    """Resolve the paged-attention implementation for this call site:
+    the explicit knob (``SparsityConfig.paged_attn``, threaded from
+    ``ServeConfig.paged_attn``) wins; ``"auto"`` consults
+    ``kernels/autotune`` (benchmark cache → backend heuristic — fused on
+    TPU, gather elsewhere; docs/serving.md has the fallback rules)."""
+    mode = getattr(sp, "paged_attn", "auto") if sp is not None else "auto"
+    if mode != "auto":
+        return mode
+    from repro.kernels import autotune
+
+    return autotune.get_paged_attn_impl(b, sg, ps, dk)
 
 
 # ------------------------------------------------------------ core attention
@@ -459,26 +494,39 @@ def gqa_forward(
 
     if page_tables is not None:
         # Paged cache: per-ROW positions (requests at different sequence
-        # offsets share one step), write-then-gather over non-contiguous
+        # offsets share one step), write-then-attend over non-contiguous
         # pages.  cache_layer["pos"] must already hold this step's
         # positions (lm.paged_step writes the shared table once, before
-        # the layer scan).
+        # the layer scan).  Two implementations share the write half:
+        # "fused" walks the page table in-kernel (kernels/paged_attn.py,
+        # online softmax + fused int8 dequant — the [B, P*PS, D] window
+        # is never materialized); "gather" materializes it via
+        # paged_read and reuses mha.
         new_kv = paged_update(
             cache_layer,
             k.reshape(b, s, kvh * dh), v.reshape(b, s, kvh * dh),
             positions, page_tables,
         )
-        k_win, v_win, pos_win = paged_read(
-            new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
-        )
-        t = k_win.shape[1]
-        out = mha(
-            q,
-            k_win.reshape(b, t, kvh, dh),
-            v_win.reshape(b, t, kvh, dh),
-            positions, pos_win,
-            window=cfg.sliding_window, chunk=None,
-        )
+        ps_sz = cache_layer["k"].shape[1]
+        if _paged_attn_impl(sp, b, s * (h // kvh), ps_sz, dh) == "fused":
+            from repro.kernels import paged_attn as paged_attn_k
+
+            out = paged_attn_k.paged_attn_cache_layer(
+                q, new_kv, cache_layer["pos"], page_tables, positions,
+                kv_heads=kvh, window=cfg.sliding_window, out_dtype=x.dtype,
+            )
+        else:
+            k_win, v_win, pos_win = paged_read(
+                new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
+            )
+            t = k_win.shape[1]
+            out = mha(
+                q,
+                k_win.reshape(b, t, kvh, dh),
+                v_win.reshape(b, t, kvh, dh),
+                positions, pos_win,
+                window=cfg.sliding_window, chunk=None,
+            )
         y = linear(p["wo"], out.reshape(b, s, h * dh), sparsity=sp, layer_idx=li)
         return y, new_kv
 
@@ -582,6 +630,27 @@ def make_mla(key, cfg, dtype):
     return params, specs
 
 
+def _mla_absorb_q(q_nope, w_kv_up, m, out_dtype):
+    """Absorb q through the k half of ``kv_up`` per head
+    (``[B, S, H, lora]``) — the score-side leg shared by the gathered
+    and fused absorbed paths."""
+    wk = w_kv_up[..., : m.qk_nope_head_dim]  # [lora, H, nope]
+    return jnp.einsum(
+        "bshn,lhn->bshl", q_nope, wk.astype(q_nope.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def _mla_up_project(ctx, w_kv_up, m, out_dtype):
+    """Project the latent context through the v half of ``kv_up``
+    (``[B, S, H, dv]``) — the output leg shared by both absorbed paths."""
+    wv = w_kv_up[..., m.qk_nope_head_dim :]  # [lora, H, dv]
+    return jnp.einsum(
+        "bshl,lhv->bshv", ctx.astype(out_dtype), wv.astype(out_dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
 def _mla_absorbed(q_nope, q_rope, lat, q_pos, k_pos, w_kv_up, m, scale, out_dtype):
     """Absorbed-form MLA attention over a latent window.
 
@@ -593,14 +662,9 @@ def _mla_absorbed(q_nope, q_rope, lat, q_pos, k_pos, w_kv_up, m, scale, out_dtyp
     traffic).  Returns [B, S, H, dv].
     """
     lora = m.kv_lora_rank
-    qk_nope = m.qk_nope_head_dim
     c_all = lat[..., :lora]
     kr_all = lat[..., lora:]
-    wk = w_kv_up[..., :qk_nope]  # [lora, H, nope]
-    q_abs = jnp.einsum(
-        "bshn,lhn->bshl", q_nope, wk.astype(q_nope.dtype),
-        preferred_element_type=jnp.float32,
-    ).astype(out_dtype)
+    q_abs = _mla_absorb_q(q_nope, w_kv_up, m, out_dtype)
     logits = (
         jnp.einsum("bshl,btl->bhst", q_abs, c_all,
                    preferred_element_type=jnp.float32)
@@ -613,11 +677,33 @@ def _mla_absorbed(q_nope, q_rope, lat, q_pos, k_pos, w_kv_up, m, scale, out_dtyp
         "bhst,btl->bshl", probs.astype(c_all.dtype), c_all,
         preferred_element_type=jnp.float32,
     )
-    wv = w_kv_up[..., qk_nope:]  # [lora, H, dv]
-    return jnp.einsum(
-        "bshl,lhv->bshv", ctx.astype(out_dtype), wv.astype(out_dtype),
-        preferred_element_type=jnp.float32,
-    ).astype(out_dtype)
+    return _mla_up_project(ctx, w_kv_up, m, out_dtype)
+
+
+def _mla_absorbed_fused(
+    q_nope, q_rope, cache_layer, pos_tbl, page_tables, q_pos,
+    w_kv_up, m, scale, out_dtype,
+):
+    """Absorbed-form MLA through the fused paged kernel.
+
+    Same math as :func:`_mla_absorbed` over a paged latent cache, but
+    the latent window is never gathered: q absorbs through ``kv_up`` per
+    head, the ``(q_abs ‖ q_rope)`` concat scores against the raw
+    ``(c_kv ‖ k_rope)`` latent pages streamed in-kernel (``kv_heads=1``
+    — the latent is shared across heads), and the context contraction
+    reuses the **latent prefix of the same k page** as v
+    (``latent_dv``), so MLA's 1-wide dummy v pages are never touched.
+    """
+    from repro.kernels import paged_attn as paged_attn_k
+
+    lora = m.kv_lora_rank
+    q_abs = _mla_absorb_q(q_nope, w_kv_up, m, out_dtype)
+    q_cat = jnp.concatenate([q_abs, q_rope.astype(out_dtype)], axis=-1)
+    ctx = paged_attn_k.paged_attn_cache_layer(
+        q_cat, cache_layer, pos_tbl, page_tables, q_pos,
+        kv_heads=1, softmax_scale=scale, latent_dv=lora, out_dtype=out_dtype,
+    )  # [B, S, H, lora]
+    return _mla_up_project(ctx, w_kv_up, m, out_dtype)
 
 
 def mla_forward(
@@ -659,21 +745,32 @@ def mla_forward(
 
     if page_tables is not None:
         # Paged latent cache: write (c_kv ‖ k_rope) into this step's page
-        # slots, gather each row's logical window, attend absorbed — the
-        # same math stepped decode runs, but with per-row positions over
-        # non-contiguous pages (v pages are the ring's 1-wide dummy).
+        # slots, then attend absorbed over non-contiguous pages — the
+        # same math stepped decode runs, but with per-row positions
+        # (v pages are the ring's 1-wide dummy).  "fused" streams the
+        # latent pages through the in-kernel page-table walk; "gather"
+        # materializes the latent window via paged_read first.
         latent = jnp.concatenate([c_kv, k_rope], axis=-1)
         new_kv = paged_update(
             cache_layer,
             latent, jnp.zeros((b, s, 1), latent.dtype),
             positions, page_tables,
         )
-        lat, _, pos_win = paged_read(
-            new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
-        )
-        out = _mla_absorbed(
-            q_nope, q_rope, lat, positions, pos_win, w_kv_up, m, scale, x.dtype
-        )
+        ps_sz = cache_layer["k"].shape[1]
+        lat_d = m.kv_lora_rank + qk_rope
+        if _paged_attn_impl(sp, b, s * h, ps_sz, lat_d) == "fused":
+            out = _mla_absorbed_fused(
+                q_nope, q_rope, new_kv, cache_layer["pos"], page_tables,
+                positions, w_kv_up, m, scale, x.dtype,
+            )
+        else:
+            lat, _, pos_win = paged_read(
+                new_kv, cache_layer["pos"], page_tables, dtype=x.dtype
+            )
+            out = _mla_absorbed(
+                q_nope, q_rope, lat, positions, pos_win, w_kv_up, m, scale,
+                x.dtype,
+            )
         y = linear(p["wo"], out.reshape(b, s, h * dv), sparsity=sp, layer_idx=li)
         return y, new_kv
 

@@ -308,6 +308,13 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
     can never leak stale entries that alias the new owner's logical
     positions (scrubbing the null page is a harmless no-op).
 
+    Per-layer attention runs either the gather path (``paged_read`` +
+    ``mha``) or the fused Pallas page-table-walk kernel
+    (``kernels/paged_attn.py``), selected by
+    ``cfg.sparsity.paged_attn`` — the serving engine threads
+    ``ServeConfig.paged_attn`` into the effective config, so one jitted
+    ``paged_step`` serves both implementations (docs/serving.md).
+
     Returns (logits [B, S, V], new_cache).  Rows are masked per-position
     (k_pos <= q_pos over gathered slot positions), so padding emits
     garbage logits that callers must not sample from (the scheduler

@@ -80,6 +80,15 @@ class ServeConfig:
     quantize-at-write/dequant-at-read handled inside
     ``models/attention.py``.  Orthogonal to ``wire_dtype`` (it needs no
     weight packing); see docs/quantization.md.
+
+    ``paged_attn`` picks the continuous-mode attention implementation:
+    ``"gather"`` materializes each request's logical window
+    (``attention.paged_read`` + ``mha``), ``"fused"`` walks the page
+    table in-kernel (``kernels/paged_attn.py`` — online softmax, int8
+    dequant fused into the page load, no materialized window; runs via
+    the Pallas interpreter off-TPU), ``"auto"`` resolves per shape via
+    ``kernels/autotune.py`` (cache → backend heuristic).  Irrelevant
+    outside ``prefill_mode="continuous"`` (docs/serving.md).
     """
 
     max_seq: int = 512
@@ -93,11 +102,16 @@ class ServeConfig:
     max_pages: Optional[int] = None  # page-pool size incl. the null page
     max_batch: int = 4  # concurrent requests per jitted step
     prefill_chunk: int = 8  # max prompt tokens a request feeds per step
+    paged_attn: str = "auto"  # auto | gather | fused (paged attention impl)
 
     def __post_init__(self):
         if self.kv_dtype not in ("native", "int8"):
             raise ValueError(
                 f"unknown kv_dtype {self.kv_dtype!r}; native|int8"
+            )
+        if self.paged_attn not in ("auto", "gather", "fused"):
+            raise ValueError(
+                f"unknown paged_attn {self.paged_attn!r}; auto|gather|fused"
             )
         if self.max_seq < 1:
             raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
@@ -193,6 +207,11 @@ class Engine:
         sp = cfg.sparsity
         if scfg.wire_dtype == "int8":
             sp = dataclasses.replace(sp, act_scale="per_row")
+        if scfg.paged_attn != "auto":
+            # pin the paged-attention implementation (continuous mode);
+            # "auto" stays the SparsityConfig default and resolves per
+            # shape inside models/attention.py
+            sp = dataclasses.replace(sp, paged_attn=scfg.paged_attn)
         if scfg.kv_dtype != "native":
             if cfg.family == "ssm":
                 # never let the caller believe a quantized cache is

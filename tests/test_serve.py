@@ -342,6 +342,122 @@ def test_batched_prefill_batch_invariance_int8():
     np.testing.assert_array_equal(solo, co)
 
 
+# ------------------------------------------- fused paged-attention kernel
+
+# The continuous==stepped byte-identity guarantee must hold on BOTH
+# paged-attention implementations: "gather" (paged_read + mha) and
+# "fused" (the in-kernel page-table walk, kernels/paged_attn.py — run
+# through the Pallas interpreter on CPU).  The fused path regroups the
+# softmax reductions (online rescaling), so this is an fp-parity claim
+# at the token level, pinned by seed like the rest of the suite; the
+# kernel-level tolerance story lives in tests/test_paged_attn.py.
+
+
+@pytest.mark.parametrize("arch", CONTINUOUS_ARCHS)
+def test_continuous_fused_matches_stepped_per_request(arch):
+    """ServeConfig(paged_attn='fused'): continuous decode over the
+    in-kernel page walk — staggered arrivals, mixed lengths, chunked
+    prefill, page recycling — still emits the solo stepped engine's
+    tokens per request, for every continuous-capable family (GQA, the
+    MLA latent path, MoE, VLM/M-RoPE)."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32) for s in (9, 5, 12)
+    ]
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=2, prefill_chunk=4, paged_attn="fused",
+    ))
+    outs = eng.generate_requests(prompts, 6, arrivals=[0, 3, 1])
+    ref = Engine(params, cfg, ServeConfig(max_seq=32, prefill_mode="stepped"))
+    for i, prompt in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[i], ref.generate(prompt[None], 6)[0],
+            err_msg=f"request {i} diverged from stepped on the fused path",
+        )
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+def test_int8_kv_fused_token_identical_to_gather(arch):
+    """Under the int8-KV wire the two paged implementations read the
+    SAME stored bytes (write-side quantization is shared; the kernel's
+    fused dequant mirrors paged_read elementwise), so fused continuous
+    serving is token-identical to gather continuous serving — and both
+    match the solo stepped int8-KV engine."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32) for s in (9, 5, 12)
+    ]
+    kw = dict(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=2, prefill_chunk=4, kv_dtype="int8",
+    )
+    outs_f = Engine(params, cfg, ServeConfig(paged_attn="fused", **kw)
+                    ).generate_requests(prompts, 6, arrivals=[0, 3, 1])
+    outs_g = Engine(params, cfg, ServeConfig(paged_attn="gather", **kw)
+                    ).generate_requests(prompts, 6, arrivals=[0, 3, 1])
+    ref = Engine(params, cfg, ServeConfig(
+        max_seq=32, prefill_mode="stepped", kv_dtype="int8"
+    ))
+    for i, prompt in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs_f[i], outs_g[i],
+            err_msg=f"request {i}: fused != gather under int8 KV",
+        )
+        np.testing.assert_array_equal(
+            outs_f[i], ref.generate(prompt[None], 6)[0],
+            err_msg=f"request {i}: fused int8-KV != stepped",
+        )
+
+
+def test_fused_stacks_with_int8_wire():
+    """paged_attn='fused' composes with the full int8 stack (weights +
+    activations + KV all int8): continuous tokens match the stepped
+    engine within the combined wire."""
+    cfg = small_cfg(sparsity=dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True).sparsity, mode="awdbb"))
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (s,)).astype(np.int32) for s in (9, 5)]
+    wkw = dict(pack_weights=True, wire_dtype="int8", kv_dtype="int8")
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=2, prefill_chunk=4, paged_attn="fused", **wkw,
+    ))
+    outs = eng.generate_requests(prompts, 6)
+    ref = Engine(params, cfg, ServeConfig(
+        max_seq=32, prefill_mode="stepped", **wkw
+    ))
+    for i, prompt in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[i], ref.generate(prompt[None], 6)[0],
+            err_msg=f"request {i} diverged under fused + full int8 stack",
+        )
+
+
+def test_paged_attn_knob_validation():
+    """Unknown paged_attn values fail loudly at construction, at both
+    the serving and the sparsity layer."""
+    with pytest.raises(ValueError, match="paged_attn"):
+        ServeConfig(paged_attn="pallas")
+    from repro.core.sparsity import SparsityConfig
+
+    with pytest.raises(ValueError, match="paged_attn"):
+        SparsityConfig(paged_attn="window")
+    # the engine threads the knob into the effective model config
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", paged_attn="fused", max_seq=32,
+        page_size=8,
+    ))
+    assert eng.cfg.sparsity.paged_attn == "fused"
+
+
 def test_serve_config_validation():
     """page_size/max_pages/max_seq coherence fails loudly at construction
     with actionable messages."""
