@@ -29,9 +29,14 @@ import json
 import sys
 
 # derived metrics where LOWER is a regression (higher is better).
-# deliberately only the *deterministic* byte ratios: timing-derived
-# ratios (e.g. decode_rewrite_speedup) divide two noisy measurements and
-# would flake CI — the absolute µs rows already guard those paths.
+# mostly the *deterministic* byte ratios: timing-derived ratios divide
+# two noisy measurements and would flake CI at a tight tolerance — the
+# absolute µs rows already guard those paths.  The one timing-derived
+# exception is continuous_vs_oneshot_throughput, tracked with a LOOSE
+# per-key tolerance (RATIO_TOLS): the fused decode loop is the
+# difference between ~0.4 and ~1.0 on the serve_bench workload, so a
+# silent fallback to per-token dispatch must fail CI even though ±15%
+# of timing jitter must not.
 TRACKED_RATIOS = (
     "weight_bytes_ratio",
     "int8_weight_bytes_ratio",
@@ -42,11 +47,17 @@ TRACKED_RATIOS = (
     # (exact layout functions — kernel_bench.paged_attn_window_bytes)
     "paged_attn_window_bytes_ratio",
     "paged_attn_window_bytes_ratio_int8",
+    # serving throughput: continuous batching vs one-shot batched prefill
+    # (benchmarks/serve_bench.py)
+    "continuous_vs_oneshot_throughput",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get
-# a near-zero tolerance instead of the timing-noise threshold
+# a near-zero tolerance instead of the timing-noise threshold.
+# RATIO_TOLS holds per-key overrides for tracked ratios derived from
+# wall timings instead of byte layouts.
 RATIO_TOL = 0.01
+RATIO_TOLS = {"continuous_vs_oneshot_throughput": 0.15}
 
 
 def _rows(record, bench):
@@ -141,8 +152,9 @@ def compare(baseline: dict, fresh: dict, threshold: float, gate_times="auto"):
                 continue
             drop = 1.0 - new_r[key] / old_r[key]
             line = f"{bench}/{key}: {old_r[key]} -> {new_r[key]} ({-drop:+.1%})"
-            if drop > RATIO_TOL:
-                failures.append(line + f"  [ratio dropped > {RATIO_TOL:.0%}]")
+            tol = RATIO_TOLS.get(key, RATIO_TOL)
+            if drop > tol:
+                failures.append(line + f"  [ratio dropped > {tol:.0%}]")
             else:
                 notes.append(line)
     return failures, notes

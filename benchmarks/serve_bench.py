@@ -1,13 +1,27 @@
 """Serving-throughput microbenchmark: continuous batching (paged KV,
-chunked-prefill interleaving) vs the one-shot batched-prefill engine on
-identical request sets, plus the int8 KV cache's cost/benefit rows.
+chunked-prefill interleaving, fused decode runs) vs the one-shot
+batched-prefill engine on identical request sets, plus the int8 KV cache
+and shared-prefix page-caching rows.
 
 Times whole ``generate`` calls (host scheduling + jitted steps) on a tiny
 CPU config after a warmup pass per engine, and reports tokens/s plus the
-continuous-vs-oneshot ratio.  The ratio is timing-derived, so it is NOT a
-gated metric (benchmarks/compare.py gates only deterministic byte
-ratios); the µs rows ride the same-host >25% slowdown gate like every
-other timed row.
+continuous-vs-oneshot ratio.  The continuous row also splits COLD wall
+time (first call: jit tracing + compiles) from the warm timed number and
+records ``paged_compiles`` — the bucketed plan shapes keep the whole
+continuous loop at exactly two compiled traces (one mixed step + one
+fused decode loop), which is what the warm timings rely on.
+``continuous_vs_oneshot_throughput`` is timing-derived but gated with a
+loose tolerance in benchmarks/compare.py (TRACKED_RATIOS): the fused
+decode loop is the difference between ~0.4 and ~1.0 on this workload,
+and a silent fallback to per-token dispatch must fail CI.
+
+Prefix-caching rows: a shared-system-prompt workload (identical 32-token
+prefix, distinct tails) runs twice through one engine; ``prefix_hit_rate``
+and ``prefill_tokens_saved_ratio`` report the page-granularity hit rate
+and the fraction of prompt tokens whose prefill FLOPs were skipped
+(docs/serving.md).  ``python -m benchmarks.serve_bench --check-prefix``
+re-reads BENCH_kernels.json and fails if the rows are missing or zero —
+the CI smoke gate for the prefix cache.
 
 INT8 KV rows: ``int8_kv_bytes_ratio`` is the deterministic paged-cache
 byte shrink vs f32 KV storage (~4x; int8 values + one f32 scale per
@@ -95,6 +109,36 @@ def bench_kv_cache(cfg, params, passes):
     return rows, round(ratio, 3)
 
 
+def bench_prefix_cache(params, cfg, b):
+    """Shared-system-prompt workload through a persistent prefix cache.
+
+    Four requests share an identical 32-token prefix (two full 16-token
+    pages) with distinct 8-token tails; the same engine serves two such
+    calls, so the second call's prompts hit the pages the first call
+    registered.  Returns the ``prefix_hit_rate`` /
+    ``prefill_tokens_saved_ratio`` rows (page-granularity stats counted
+    at admission — serve/paged_cache.PrefixCache)."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab, (32,)).astype(np.int32)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=64, page_size=16,
+        max_batch=b, prefill_chunk=8, prefix_cache=True,
+    ))
+    for _ in range(2):
+        tails = rng.integers(0, cfg.vocab, (b, 8)).astype(np.int32)
+        prompts = [np.concatenate([system, tails[i]]) for i in range(b)]
+        eng.generate_requests(prompts, 8)
+    stats = eng.prefix_stats()
+    return [
+        {"prefix_hit_rate": round(stats["hit_rate"], 3),
+         "prefill_tokens_saved_ratio": round(stats["tokens_saved_ratio"], 3),
+         "prefix_pages_hit": stats["page_hits"],
+         "prefill_tokens_saved": stats["prefill_tokens_saved"]},
+    ]
+
+
 def bench_serve(smoke: bool = False):
     from repro import configs
     from repro.models import lm
@@ -112,9 +156,13 @@ def bench_serve(smoke: bool = False):
     ).astype(np.int32)
 
     oneshot = Engine(params, cfg, ServeConfig(max_seq=64, prefill_mode="batched"))
+    # headline continuous row runs with the prefix cache off: identical
+    # prompts every pass would otherwise skip prefill after the first,
+    # and the row must time the full prefill+decode work the one-shot
+    # engine does (the prefix win has its own rows below)
     ckw = dict(
         prefill_mode="continuous", max_seq=64,
-        page_size=16, max_batch=b, prefill_chunk=8,
+        page_size=16, max_batch=b, prefill_chunk=8, prefix_cache=False,
     )
     cont = Engine(params, cfg, ServeConfig(**ckw))
     # the fused page-table-walk engine: on this CPU host the kernel runs
@@ -124,7 +172,9 @@ def bench_serve(smoke: bool = False):
     # HBM-traffic claim; docs/perf.md)
     cont_fused = Engine(params, cfg, ServeConfig(paged_attn="fused", **ckw))
     oneshot.generate(prompts, n_new)  # warmup/compile
-    cont.generate(prompts, n_new)
+    # cold wall: first continuous call pays jit tracing + both compiles
+    # (mixed step + fused decode loop); warm passes time the steady state
+    s_cold = _time_once(lambda: cont.generate(prompts, n_new), passes=1)
     cont_fused.generate(prompts, n_new)
     s_one = _time_once(lambda: oneshot.generate(prompts, n_new), passes)
     s_cont = _time_once(lambda: cont.generate(prompts, n_new), passes)
@@ -135,14 +185,78 @@ def bench_serve(smoke: bool = False):
     rows = [
         {"impl": "serve_oneshot_batched", "us": round(s_one * 1e6, 1),
          "tokens_per_s": round(tps_one, 1)},
+        # cold_wall_us is one-off compile-dominated wall time: recorded
+        # for the trajectory, deliberately NOT a gated ``us`` row.
+        # paged_compiles counts the loop's compiled traces — the shape
+        # bucketing keeps it at exactly 2 across the whole workload.
         {"impl": "serve_continuous", "us": round(s_cont * 1e6, 1),
-         "tokens_per_s": round(tps_cont, 1)},
+         "tokens_per_s": round(tps_cont, 1),
+         "cold_wall_us": round(s_cold * 1e6, 1),
+         "paged_compiles": cont.paged_compiles,
+         "decode_run_calls": cont.decode_run_calls,
+         "fused_tokens": cont.fused_tokens},
         {"impl": "serve_continuous_paged_attn_fused",
          "us": round(s_fused * 1e6, 1),
          "tokens_per_s": round(tok / s_fused, 1)},
-        # timing-derived, reported not gated (see module docstring)
+        # timing-derived; gated with a loose per-key tolerance in
+        # benchmarks/compare.py (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
+        *bench_prefix_cache(params, cfg, b),
         *kv_rows,
         {"shape": [b, s0, n_new], "prefill_chunk": 8, "page_size": 16},
     ]
     return rows, round(tps_cont / tps_one, 3)
+
+
+def check_prefix(path: str = "BENCH_kernels.json") -> int:
+    """CI smoke gate: the recorded serve_bench rows must show a live
+    prefix cache (hit rate and saved-token ratio > 0) and the two-trace
+    compile budget.  Returns a process exit code."""
+    import json
+
+    with open(path) as f:
+        record = json.load(f)
+    rows = record["benchmarks"]["serve_bench"]["rows"]
+    flat = {}
+    for r in rows:
+        if isinstance(r, dict):
+            if r.get("impl") == "serve_continuous":
+                flat["paged_compiles"] = r.get("paged_compiles")
+            flat.update({
+                k: r[k] for k in (
+                    "prefix_hit_rate", "prefill_tokens_saved_ratio",
+                    "continuous_vs_oneshot_throughput",
+                ) if k in r
+            })
+    failures = []
+    if not flat.get("prefix_hit_rate", 0) > 0:
+        failures.append(f"prefix_hit_rate not > 0: {flat.get('prefix_hit_rate')}")
+    if not flat.get("prefill_tokens_saved_ratio", 0) > 0:
+        failures.append(
+            "prefill_tokens_saved_ratio not > 0: "
+            f"{flat.get('prefill_tokens_saved_ratio')}"
+        )
+    if flat.get("paged_compiles") != 2:
+        failures.append(f"paged_compiles != 2: {flat.get('paged_compiles')}")
+    if "continuous_vs_oneshot_throughput" not in flat:
+        failures.append("continuous_vs_oneshot_throughput row missing")
+    for line in failures:
+        print(f"check-prefix FAIL: {line}")
+    if not failures:
+        print(
+            "check-prefix ok: "
+            f"hit_rate={flat['prefix_hit_rate']} "
+            f"tokens_saved_ratio={flat['prefill_tokens_saved_ratio']} "
+            f"paged_compiles={flat['paged_compiles']}"
+        )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--check-prefix" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check-prefix"]
+        sys.exit(check_prefix(*args[:1]))
+    for row in bench_serve(smoke="--smoke" in sys.argv)[0]:
+        print(row)

@@ -122,7 +122,14 @@ def _head(params, x, cfg):
     if cfg.tie_embeddings:
         w = params["embed"]["w"]
         return jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
-    return linear(params["lm_head"], x, sparsity=None)
+    # Thread the sparsity config for its *quantization* knobs only
+    # (dap_input=False: the head input is never DAP-pruned).  Without it
+    # a packed-int8 lm_head fell back to a per-TENSOR dynamic activation
+    # scale — one amax shared across the batch — so a row's logits
+    # depended on what it was batched with (padding rows included),
+    # breaking the serve engine's per-row batch-invariance contract at
+    # the very last matmul.
+    return linear(params["lm_head"], x, sparsity=cfg.sparsity, dap_input=False)
 
 
 def forward(
@@ -288,8 +295,29 @@ def decode_step(params, cache, tokens: jax.Array, pos, cfg):
     return logits, new_cache
 
 
+def _prepare_pages(cache, scrub_pages, cow_pages):
+    """Pre-write page maintenance, in order: scrub freshly allocated
+    pages' slot positions, then land copy-on-write duplicates (dst pages
+    are fresh, so the copy follows the scrub — and every plane, including
+    int8 scale planes and the shared position table, is copied so the
+    duplicate is byte-identical to its source).  Null-padded entries
+    (page 0 / (0, 0) pairs) are harmless no-ops."""
+    pos_tbl = cache["pos"]
+    if scrub_pages is not None:
+        pos_tbl = pos_tbl.at[scrub_pages].set(-1)
+    kv_planes = {name: val for name, val in cache.items() if name != "pos"}
+    if cow_pages is not None:
+        src, dst = cow_pages[:, 0], cow_pages[:, 1]
+        kv_planes = {
+            name: val.at[:, dst].set(val[:, src])
+            for name, val in kv_planes.items()
+        }
+        pos_tbl = pos_tbl.at[dst].set(pos_tbl[src])
+    return kv_planes, pos_tbl
+
+
 def paged_step(params, cache, tokens, positions, page_tables, cfg,
-               scrub_pages=None):
+               scrub_pages=None, cow_pages=None):
     """One continuous-batching step over the paged KV cache.
 
     ``tokens/positions [B, S]`` carry a *mixed* batch: each row is an
@@ -307,6 +335,14 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
     before anything else, so a page recycled from a finished request
     can never leak stale entries that alias the new owner's logical
     positions (scrubbing the null page is a harmless no-op).
+
+    ``cow_pages`` (fixed-width int32 ``[W, 2]``, (0, 0)-padded) lists
+    copy-on-write ``(src, dst)`` page pairs from the scheduler: before
+    this step's writes, every KV plane and the slot-position row of
+    ``src`` is copied into ``dst`` — the step then writes the divergent
+    token into ``dst`` through the (already rewritten) page table while
+    ``src`` stays byte-identical for its other sharers (shared-prefix
+    caching, docs/serving.md).
 
     Per-layer attention runs either the gather path (``paged_read`` +
     ``mha``) or the fused Pallas page-table-walk kernel
@@ -336,12 +372,11 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
     if cfg.mla is None:
         rope_cs = _rope_cs(cfg, positions, pos3)
 
-    # One shared slot-position write for the whole stack (every layer
-    # stores the same token positions); layers read the updated table so
-    # this step's tokens are visible to intra-chunk causal attention.
-    pos_tbl = cache["pos"]
-    if scrub_pages is not None:
-        pos_tbl = pos_tbl.at[scrub_pages].set(-1)
+    # Scrub + CoW maintenance, then one shared slot-position write for
+    # the whole stack (every layer stores the same token positions);
+    # layers read the updated table so this step's tokens are visible to
+    # intra-chunk causal attention.
+    kv_planes, pos_tbl = _prepare_pages(cache, scrub_pages, cow_pages)
     new_pos_tbl = attention.paged_update_pos(pos_tbl, positions, page_tables)
 
     def body(carry, inp):
@@ -355,10 +390,68 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
 
     # every per-layer plane (k/v and, under the int8 KV wire, the
     # k_scale/v_scale planes) scans; the shared pos table is carried once
-    kv_planes = {name: val for name, val in cache.items() if name != "pos"}
     x, new_kv = scan_over_layers(body, x, (params["layers"], kv_planes), cfg)
     logits = _head(params, x, cfg)
     return logits, {**new_kv, "pos": new_pos_tbl}
+
+
+def paged_decode_loop(params, cache, tokens, positions, page_tables,
+                      n_steps, cfg, *, max_steps,
+                      scrub_pages=None, cow_pages=None):
+    """Fused multi-token greedy decode over the paged KV cache.
+
+    Runs up to ``max_steps`` (static buffer width) decode iterations of
+    :func:`paged_step` *inside one jitted dispatch* — an on-device
+    ``fori_loop`` whose trip count ``n_steps`` is a **traced** scalar, so
+    one compiled trace serves every run length.  Sampling is fused into
+    the loop body (greedy argmax over the unpadded vocab, exactly the
+    engine's ``_sample_at`` at chunk index 0), and each sampled token is
+    fed back as the next iteration's input.  This is what makes
+    continuous batching fast: a decode-only batch pays ONE Python→XLA
+    dispatch per run instead of one per token (serve/scheduler.py plans
+    the runs, ``benchmarks/serve_bench.py`` measures the win).
+
+    ``tokens [B, 1]`` holds each row's last sampled token; ``positions
+    [B]`` its first write position (-1 marks an idle row: it keeps
+    writing to the null page at position -1 and its outputs are garbage
+    the scheduler never reads).  Scrub/CoW maintenance covers the WHOLE
+    run (the scheduler pre-allocates every page the run will touch), so
+    it is applied once up front, not per iteration.
+
+    Returns (sampled [B, max_steps] int32, new_cache); entries past
+    ``n_steps`` are zeros.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged_decode_loop unsupported for recurrent family "
+            f"{cfg.family!r}: only attention state pages"
+        )
+    kv_planes, pos_tbl = _prepare_pages(cache, scrub_pages, cow_pages)
+    cache = {**kv_planes, "pos": pos_tbl}
+    b = tokens.shape[0]
+    v = cfg.vocab  # slice off vocab padding before argmax
+
+    def body(i, carry):
+        cache, toks, pos, out = carry
+        logits, cache = paged_step(
+            params, cache, toks, pos[:, None], page_tables, cfg
+        )
+        nxt = jnp.argmax(logits[:, 0, :v], axis=-1).astype(jnp.int32)
+        out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+        # Idle rows (pos < 0) must keep feeding the SAME (token 0, -1)
+        # padding the host-driven mixed step feeds, not their own garbage
+        # argmax — every iteration's batch then matches the one-call-per-
+        # token schedule input-for-input, keeping runs byte-exact.
+        active = pos >= 0
+        nxt = jnp.where(active, nxt, 0)
+        pos = jnp.where(active, pos + 1, pos)
+        return cache, nxt[:, None], pos, out
+
+    out0 = jnp.zeros((b, max_steps), jnp.int32)
+    cache, _, _, out = jax.lax.fori_loop(
+        0, n_steps, body, (cache, tokens, positions, out0)
+    )
+    return out, cache
 
 
 def prefill(params, tokens, cfg, cache=None):

@@ -43,7 +43,7 @@ import numpy as np
 from repro.core import dbb
 from repro.models import common, encdec, lm
 from repro.serve import paged_cache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import DecodeRun, Request, Scheduler
 
 # Families whose cache lm.prefill fills exactly (pure attention caches).
 # The continuous/paged path shares this set: both need attention-only
@@ -75,6 +75,22 @@ class ServeConfig:
     paged cache and scheduler (continuous mode only).  ``max_pages``
     defaults to ``max_batch`` full-length requests plus the null page.
 
+    ``decode_block`` caps how many tokens a decode-only batch emits per
+    jitted dispatch: once no active row is prefilling, the scheduler
+    plans a fused :class:`~repro.serve.scheduler.DecodeRun` of up to
+    ``decode_block`` tokens per row, executed by ONE
+    ``lm.paged_decode_loop`` call (on-device loop, in-loop sampling,
+    dynamic trip count — a single compile serves every run length).
+    ``1`` recovers one-dispatch-per-token stepping.
+
+    ``prefix_cache`` keeps a page-granularity shared-prefix cache alive
+    across ``generate_requests`` calls: prompts whose full pages were
+    already computed adopt those pages (refcounted, copy-on-write on
+    divergence) instead of re-running prefill — byte-identical outputs,
+    prefill FLOPs skipped (docs/serving.md).  Only *prompt* pages are
+    ever cached, and their KV depends solely on the prompt tokens, so
+    reuse is sampling-independent.
+
     ``kv_dtype="int8"`` stores the KV cache (ring and paged) as int8
     values + per-token f32 scales — ~4x fewer KV bytes than f32 — with
     quantize-at-write/dequant-at-read handled inside
@@ -103,6 +119,8 @@ class ServeConfig:
     max_batch: int = 4  # concurrent requests per jitted step
     prefill_chunk: int = 8  # max prompt tokens a request feeds per step
     paged_attn: str = "auto"  # auto | gather | fused (paged attention impl)
+    decode_block: int = 16  # max tokens per fused decode dispatch
+    prefix_cache: bool = True  # shared-prefix page reuse across calls
 
     def __post_init__(self):
         if self.kv_dtype not in ("native", "int8"):
@@ -122,6 +140,10 @@ class ServeConfig:
         if self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}"
+            )
+        if self.decode_block < 1:
+            raise ValueError(
+                f"decode_block must be >= 1, got {self.decode_block}"
             )
         if self.max_pages is not None:
             need = self.pages_per_request + 1
@@ -238,10 +260,17 @@ class Engine:
             lambda logits: jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
         )
         # continuous mode: one mixed paged step + per-row sampling at each
-        # row's own last valid chunk index
+        # row's own last valid chunk index, plus the fused decode loop
+        # (dynamic trip count n -> a single compile for every run length)
         self._paged_step = jax.jit(
-            lambda p, c, t, pos, tbl, scrub: lm.paged_step(
-                p, c, t, pos, tbl, cfg, scrub_pages=scrub
+            lambda p, c, t, pos, tbl, scrub, cow: lm.paged_step(
+                p, c, t, pos, tbl, cfg, scrub_pages=scrub, cow_pages=cow
+            )
+        )
+        self._decode_run = jax.jit(
+            lambda p, c, t, pos, tbl, scrub, cow, n: lm.paged_decode_loop(
+                p, c, t, pos, tbl, n, cfg, max_steps=scfg.decode_block,
+                scrub_pages=scrub, cow_pages=cow,
             )
         )
         self._sample_at = jax.jit(
@@ -253,7 +282,47 @@ class Engine:
         # calls into the jitted prefill/decode/paged-step functions
         self.prefill_calls = 0
         self.decode_calls = 0
-        self.step_calls = 0
+        self.step_calls = 0  # continuous dispatches (mixed steps + runs)
+        self.decode_run_calls = 0  # fused decode runs among step_calls
+        self.fused_tokens = 0  # tokens emitted inside fused runs
+        # continuous-mode state that persists across generate_requests
+        # calls: allocator + device cache (so prefix-cached pages stay
+        # warm) and the prefix cache itself; built lazily on first use
+        self._cont = None
+        # request ids must be unique across calls: the persistent
+        # allocator keys page tables by rid
+        self._rid = 0
+        # fallback compile counter: distinct dispatch signatures seen
+        # (mirrors jit cache size when ``_cache_size`` is unavailable)
+        self._step_shapes = set()
+
+    def _next_rid(self) -> int:
+        self._rid += 1
+        return self._rid
+
+    @property
+    def paged_compiles(self) -> int:
+        """Compiled trace count of the continuous loop's jitted entry
+        points (`_paged_step` + `_decode_run`) — the serve_bench
+        compile-count row.  The bucketed plan shapes keep this at 2 (one
+        mixed-step trace + one decode-loop trace) regardless of batch
+        composition, chunk churn, or run length."""
+        n = 0
+        for f in (self._paged_step, self._decode_run):
+            try:
+                n += f._cache_size()
+            except Exception:
+                return len(self._step_shapes)
+        return n
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache statistics (zeros until continuous mode ran with
+        ``prefix_cache=True``)."""
+        if self._cont is not None and self._cont["prefix"] is not None:
+            return self._cont["prefix"].stats()
+        return paged_cache.PrefixCache(
+            paged_cache.PageAllocator(2, 1)
+        ).stats()
 
     def _resolve_prefill_mode(self) -> str:
         mode = self.scfg.prefill_mode
@@ -338,12 +407,20 @@ class Engine:
         a per-request sequence; ``arrivals`` (scheduler iterations, default
         all 0) staggers request visibility — a request admits only once
         its arrival iteration has passed and a batch row plus enough KV
-        pages for its lifetime are available.  Every iteration runs ONE
-        jitted ``lm.paged_step`` over the mixed batch (chunked prefills +
-        in-flight decodes at per-row positions over non-contiguous
-        pages).  Returns ``prompt ‖ generated`` per request, in input
-        order — byte-identical per request to the stepped engine (the
-        parity suite enforces this).
+        pages for its lifetime are available.  While any row is
+        prefilling, each iteration runs ONE jitted ``lm.paged_step`` over
+        the mixed batch (chunked prefills + in-flight decodes at per-row
+        positions over non-contiguous pages); once the whole batch is
+        decoding, iterations batch into fused ``lm.paged_decode_loop``
+        runs of up to ``decode_block`` tokens per dispatch.  Returns
+        ``prompt ‖ generated`` per request, in input order —
+        byte-identical per request to the stepped engine (the parity
+        suite enforces this).
+
+        The paged cache, allocator, and prefix cache persist across
+        calls (``prefix_cache=True``): prompts sharing full pages with
+        earlier requests — same call or earlier calls — skip prefill for
+        those pages (docs/serving.md).
         """
         scfg = self.scfg
         n = len(prompts)
@@ -373,33 +450,65 @@ class Engine:
                 )
             reqs.append(
                 Request(
-                    rid=i, prompt=prompt, max_new_tokens=n_list[i],
-                    arrival=arr_list[i],
+                    rid=self._next_rid(), prompt=prompt,
+                    max_new_tokens=n_list[i], arrival=arr_list[i],
                 )
             )
+        if self._cont is None:
+            allocator = paged_cache.PageAllocator(
+                scfg.total_pages, scfg.page_size
+            )
+            self._cont = {
+                "allocator": allocator,
+                "prefix": (
+                    paged_cache.PrefixCache(allocator)
+                    if scfg.prefix_cache else None
+                ),
+                "cache": paged_cache.make_paged_cache(
+                    self.cfg, scfg.total_pages, scfg.page_size
+                ),
+            }
+        cont = self._cont
         sched = Scheduler(
             max_batch=scfg.max_batch,
             page_size=scfg.page_size,
             n_pages=scfg.total_pages,
             max_pages_per_req=scfg.pages_per_request,
             prefill_chunk=scfg.prefill_chunk,
+            decode_block=scfg.decode_block,
+            allocator=cont["allocator"],
+            prefix_cache=cont["prefix"],
         )
         for req in reqs:
             sched.add(req)
-        cache = paged_cache.make_paged_cache(
-            self.cfg, scfg.total_pages, scfg.page_size
-        )
+        cache = cont["cache"]
         while sched.has_work():
             plan = sched.plan()
             if plan is None:  # only future arrivals left: advance time
                 sched.tick()
                 continue
             self.step_calls += 1
+            if isinstance(plan, DecodeRun):
+                self.decode_run_calls += 1
+                self.fused_tokens += plan.n_steps
+                self._step_shapes.add(("run",))
+                sampled, cache = self._decode_run(
+                    self.params, cache,
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
+                    jnp.asarray(plan.page_tables),
+                    jnp.asarray(plan.scrub_pages),
+                    jnp.asarray(plan.cow_pages), jnp.int32(plan.n_steps),
+                )
+                sched.commit_run(plan, np.asarray(sampled))
+                continue
+            self._step_shapes.add(("step",) + plan.tokens.shape)
             logits, cache = self._paged_step(
                 self.params, cache,
                 jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
                 jnp.asarray(plan.page_tables), jnp.asarray(plan.scrub_pages),
+                jnp.asarray(plan.cow_pages),
             )
             sampled = self._sample_at(logits, jnp.asarray(plan.sample_idx))
             sched.commit(plan, np.asarray(sampled))
+        cont["cache"] = cache
         return [req.tokens() for req in reqs]

@@ -1,5 +1,6 @@
-"""Paged KV cache: fixed-size pages, a host-side free-list allocator, and
-per-request page tables.
+"""Paged KV cache: fixed-size pages, a host-side free-list allocator with
+refcounted copy-on-write sharing, per-request page tables, and the
+shared-prefix page cache built on top of them.
 
 The physical cache is a pool of ``n_pages`` fixed-size pages per layer
 (``k/v [L, n_pages, page_size, D]``) plus one *shared* slot-position table
@@ -17,16 +18,30 @@ all padding-token writes to its slot 0 with ``pos = -1`` — so gathers
 through any (padded) page table are uniform and masking falls out of the
 position array, exactly like the ring cache (``models/attention.py``).
 
+**Sharing.**  Every live page carries a refcount: a page referenced by
+one request (or held by the :class:`PrefixCache`) has refcount 1; a page
+adopted by further requests — shared-prefix reuse — goes higher.  A page
+returns to the free list only when its refcount drops to zero
+(*scrub-on-last-free*: the zero transition marks the page dirty, and the
+scheduler invalidates its slot positions in the jitted step that hands
+it back out).  A request that must write into a page it shares first
+duplicates it via :meth:`PageAllocator.cow` — copy-on-write on the first
+divergent write — so a shared page is **never** mutated in place.
+
 The allocator is deliberately host-side pure Python: page management is
 control flow (admission, growth, release), not math — it runs between
 jitted steps and only its *outputs* (padded int32 page tables) cross the
-jit boundary.  Aliasing/leak freedom is property-tested in
+jit boundary.  Aliasing/refcount/leak freedom is property-tested in
 ``tests/test_paged_cache.py``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax.numpy as jnp
 
@@ -43,13 +58,18 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator with per-request page tables.
+    """Free-list page allocator with refcounted pages and per-request
+    page tables.
 
     Invariants (fuzz-tested):
-      * a page belongs to at most one live request (no aliasing),
-      * ``free ∪ allocated == {1 .. n_pages-1}`` at all times (no leaks),
+      * every live page's refcount equals the number of page-table
+        references plus external holds (no page freed while referenced),
+      * ``free ∪ live == {1 .. n_pages-1}`` at all times (no leaks),
       * :data:`NULL_PAGE` is never allocated,
-      * ``slot_of`` reconstructs each request's logical stream exactly.
+      * ``slot_of`` reconstructs each request's logical stream exactly,
+      * a page becomes *dirty* exactly when its refcount drops to zero
+        (scrub-on-last-free), and is scrubbed before its next owner's
+        first write (:meth:`note_scrubbed` is the scheduler's receipt).
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -66,6 +86,11 @@ class PageAllocator:
         # allocation order deterministic and easy to reason about in tests
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
+        self._refs: Dict[int, int] = {}  # live page -> reference count
+        # pages whose last reference was dropped but whose slot positions
+        # have not been invalidated on device yet (never live pages)
+        self._dirty: set = set()
+        self.cow_count = 0  # lifetime copy-on-write duplications (stats)
 
     # ------------------------------------------------------------- queries
 
@@ -82,6 +107,14 @@ class PageAllocator:
     def n_slots(self, rid) -> int:
         """Logical capacity currently backed by pages."""
         return len(self._tables[rid]) * self.page_size
+
+    def refcount(self, page: int) -> int:
+        """References on ``page`` (0 when free)."""
+        return self._refs.get(page, 0)
+
+    def dirty_pages(self) -> frozenset:
+        """Free pages still carrying a previous owner's slot positions."""
+        return frozenset(self._dirty)
 
     def slot_of(self, rid, pos: int) -> Tuple[int, int]:
         """Physical (page_id, slot) of logical position ``pos``."""
@@ -123,14 +156,195 @@ class PageAllocator:
                 f"page_size {self.page_size})"
             )
         new = [self._free.pop() for _ in range(need)]
+        for p in new:
+            self._refs[p] = 1
         table.extend(new)
         return new
 
+    def adopt(self, rid, pages: Sequence[int]) -> None:
+        """Append already-live ``pages`` to ``rid``'s table, sharing them
+        (refcount + 1 each).  Shared-prefix admission: the adopter reuses
+        the pages' KV content instead of recomputing it, and must go
+        through :meth:`cow` before writing into any of them."""
+        for p in pages:
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"cannot adopt non-live page {p}")
+        table = self._tables[rid]
+        for p in pages:
+            self._refs[p] += 1
+            table.append(p)
+
+    def hold(self, page: int) -> None:
+        """External reference (prefix cache): keep ``page`` alive past its
+        owning request."""
+        if self._refs.get(page, 0) < 1:
+            raise ValueError(f"cannot hold non-live page {page}")
+        self._refs[page] += 1
+
+    def unhold(self, page: int) -> None:
+        """Drop an external reference taken with :meth:`hold`."""
+        self._decref(page)
+
+    def cow(self, rid, idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: make page ``idx`` of ``rid``'s table private.
+
+        Returns ``(src, dst)`` — the caller must copy ``src``'s physical
+        content (all KV planes + slot positions) into ``dst`` *before*
+        the divergent write — or ``None`` when the page is already
+        private (sole reference).  Raises ``ValueError`` without side
+        effects when no page is free for the duplicate.
+        """
+        table = self._tables[rid]
+        src = table[idx]
+        if self._refs[src] == 1:
+            return None
+        if not self._free:
+            raise ValueError(
+                f"out of KV pages: request {rid!r} needs a copy-on-write "
+                f"duplicate of page {src}, 0 free (pool {self.n_pages})"
+            )
+        dst = self._free.pop()
+        self._refs[dst] = 1
+        self._refs[src] -= 1  # shared, so never reaches zero here
+        table[idx] = dst
+        self.cow_count += 1
+        return src, dst
+
     def free(self, rid) -> None:
-        """Release every page of ``rid`` back to the pool."""
+        """Drop every page reference of ``rid``; pages whose refcount
+        reaches zero return to the pool (and become dirty)."""
         pages = self._tables.pop(rid)
-        # re-add in reverse so freshly freed low ids are handed out first
-        self._free.extend(reversed(pages))
+        # drop in reverse so freshly freed low ids are handed out first
+        for p in reversed(pages):
+            self._decref(p)
+
+    def note_scrubbed(self, pages: Sequence[int]) -> None:
+        """Record that ``pages``' slot positions were invalidated on
+        device (the jitted step's scrub) — clears their dirty mark."""
+        self._dirty.difference_update(pages)
+
+    def _decref(self, page: int) -> None:
+        r = self._refs[page] - 1
+        if r > 0:
+            self._refs[page] = r
+            return
+        del self._refs[page]
+        self._free.append(page)
+        self._dirty.add(page)
+
+
+# ------------------------------------------------------ shared-prefix cache
+
+
+def page_hashes(tokens: np.ndarray, page_size: int) -> List[str]:
+    """Chained content hash of every *full* page of ``tokens``.
+
+    ``h_i = H(h_{i-1} ‖ tokens[i*ps:(i+1)*ps])`` — each digest commits to
+    the entire prefix up to and including page ``i``, so one flat
+    hash → page map can never alias two prompts that diverge anywhere
+    earlier, even when a later page's tokens coincide.  Partial trailing
+    pages are never hashed: a page is only reusable once every slot is
+    final (page granularity is the whole point — see docs/serving.md).
+    """
+    out: List[str] = []
+    h = hashlib.sha256(str(page_size).encode())
+    for i in range(len(tokens) // page_size):
+        chunk = np.ascontiguousarray(
+            tokens[i * page_size : (i + 1) * page_size], dtype=np.int32
+        )
+        h.update(chunk.tobytes())
+        out.append(h.hexdigest())
+    return out
+
+
+class PrefixCache:
+    """Page-granularity shared-prefix cache over a :class:`PageAllocator`.
+
+    Maps chained prompt-page hashes to live page ids.  Every cached page
+    is kept alive by one allocator *hold*; entries are LRU-ordered and
+    evicted under pool pressure — but only pages whose sole remaining
+    reference is the cache's own hold (refcount 1) can be reclaimed, so
+    eviction never yanks a page out from under a running request.
+    """
+
+    def __init__(self, allocator: PageAllocator):
+        self.allocator = allocator
+        self._entries: "OrderedDict[str, int]" = OrderedDict()  # hash -> page
+        # stats (persist across engine calls; surfaced by serve_bench)
+        self.page_lookups = 0
+        self.page_hits = 0
+        self.insertions = 0
+        self.evictions = 0
+        self.tokens_total = 0  # prompt tokens admitted while cache active
+        self.tokens_saved = 0  # prompt tokens whose prefill was skipped
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Longest run of cached pages covering ``prompt``'s full pages.
+
+        Returns page ids in logical order; hits refresh LRU recency.
+        Does *not* take references — the caller adopts the pages (or
+        drops them) atomically at admission.
+        """
+        return self.match_hashes(
+            page_hashes(prompt, self.allocator.page_size)
+        )
+
+    def match_hashes(self, hashes: Sequence[str]) -> List[int]:
+        """:meth:`match` over precomputed chained page hashes."""
+        pages: List[int] = []
+        for h in hashes:
+            page = self._entries.get(h)
+            if page is None:
+                break
+            self._entries.move_to_end(h)
+            pages.append(page)
+        return pages
+
+    def register(self, digest: str, page: int) -> None:
+        """Publish ``digest -> page`` (no-op if already cached).  Takes a
+        hold so the page outlives its computing request."""
+        if digest in self._entries:
+            return
+        self.allocator.hold(page)
+        self._entries[digest] = page
+        self.insertions += 1
+
+    def evict(self, n_needed: int, protect: Sequence[int] = ()) -> int:
+        """Reclaim up to ``n_needed`` pages by unholding LRU entries whose
+        page the cache alone keeps alive (refcount 1).  Entries on shared
+        pages are skipped — they cost no capacity while shared, and stay
+        useful — as are pages in ``protect`` (matched hits the caller is
+        about to adopt).  Returns the number of pages actually freed."""
+        if n_needed <= 0:
+            return 0
+        guard = set(protect)
+        freed = 0
+        for digest, page in list(self._entries.items()):  # LRU -> MRU
+            if page in guard or self.allocator.refcount(page) != 1:
+                continue
+            del self._entries[digest]
+            self.allocator.unhold(page)
+            self.evictions += 1
+            freed += 1
+            if freed >= n_needed:
+                break
+        return freed
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "entries": len(self._entries),
+            "page_lookups": self.page_lookups,
+            "page_hits": self.page_hits,
+            "hit_rate": self.page_hits / max(1, self.page_lookups),
+            "insertions": self.insertions,
+            "evictions": self.evictions,
+            "prefill_tokens_total": self.tokens_total,
+            "prefill_tokens_saved": self.tokens_saved,
+            "tokens_saved_ratio": self.tokens_saved / max(1, self.tokens_total),
+        }
 
 
 # -------------------------------------------------------------- cache state

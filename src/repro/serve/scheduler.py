@@ -1,5 +1,6 @@
 """Continuous-batching scheduler: iteration-level admission over a paged
-KV cache, chunked-prefill interleaved with in-flight decodes.
+KV cache, chunked-prefill interleaved with in-flight decodes, fused
+multi-token decode runs, and shared-prefix page reuse.
 
 Orca-style iteration-level scheduling (PAPERS.md): instead of one
 batched-prefill call per prompt batch followed by lock-step decode, every
@@ -11,6 +12,15 @@ stalls co-batched decodes: it streams through in chunks while decode rows
 keep emitting a token per iteration, which is exactly the
 high-utilization mixed batch the S2TA joint A/W-DBB datapath wants.
 
+**Shape discipline.**  Every mixed step has the SAME trace shape
+(``[max_batch, prefill_chunk]`` tokens, fixed-width scrub/CoW buffers),
+and decode-only iterations are batched into a single
+:class:`DecodeRun` consumed by one jitted ``lm.paged_decode_loop`` call
+(an on-device ``fori_loop`` with a *dynamic* step count) — so the whole
+serving loop compiles exactly two model traces, no matter how batch
+composition or chunk widths churn.  Plan buffers are persistent ndarrays
+mutated in place rather than per-tick list rebuilds.
+
 Memory is managed by the page allocator (serve/paged_cache.py): requests
 are **admitted** only when the pool can cover their full lifetime
 (prompt + max_new_tokens), accounting for the outstanding growth of
@@ -18,13 +28,15 @@ already-running requests — so on-demand ``ensure`` growth during decode
 can never fail mid-flight (no preemption needed), while pages are still
 allocated incrementally as positions are written.
 
-The scheduler is storage-dtype agnostic: it plans page ids and token
-positions only, so the int8 KV wire (``ServeConfig.kv_dtype="int8"`` —
-int8 pages + per-token scale planes, docs/quantization.md) changes
-nothing here.  Page recycling already covers the scale planes: the
-``scrub_pages`` list invalidates recycled pages' *positions*, and
-masking derives solely from positions, so stale int8 values/scales can
-never leak into a new owner's window.
+**Shared-prefix reuse.**  With a :class:`~repro.serve.paged_cache.
+PrefixCache` attached, admission matches the prompt's full pages against
+previously computed ones and *adopts* hits (refcount + 1) instead of
+recomputing them — prefill starts at the first un-cached position.  A
+prompt fully covered by cached pages still recomputes its LAST token
+(sampling needs its logits); that write lands in an adopted page and is
+what triggers copy-on-write.  Fully computed prompt pages are published
+back to the cache at commit time.  Admission reserves one extra page for
+the potential CoW duplicate so the in-flight guarantee holds.
 
 Token-stream contract (mirrors the stepped engine exactly):
   * prompt positions ``0..s0-1`` are written during (chunked) prefill;
@@ -32,7 +44,8 @@ Token-stream contract (mirrors the stepped engine exactly):
   * decode feeds generated token ``g_i`` at position ``s0+i`` and samples
     ``g_{i+1}``; a request finishes after ``max_new_tokens`` samples.
 The parity suite (tests/test_serve.py) asserts byte-identical tokens per
-request against the stepped path.
+request against the stepped path — including prefix-cache hits, which
+must be byte-identical to a cold start.
 """
 
 from __future__ import annotations
@@ -42,7 +55,13 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.serve.paged_cache import NULL_PAGE, PageAllocator, pages_for
+from repro.serve.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    PrefixCache,
+    page_hashes,
+    pages_for,
+)
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
@@ -60,6 +79,10 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     state: str = WAITING
     slot: Optional[int] = None  # batch row while RUNNING
+    # -- prefix-cache state --
+    hashes: Optional[List[str]] = None  # chained full-page prompt hashes
+    reg_pages: int = 0  # prompt pages already published to the cache
+    cow_reserved: int = 0  # admission-reserved CoW pages (full-prefix hit)
 
     @property
     def prompt_len(self) -> int:
@@ -96,6 +119,27 @@ class StepPlan:
     scrub_pages: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0,), np.int32)
     )
+    # copy-on-write (src, dst) page pairs (fixed width, (0, 0)-padded):
+    # dst must receive src's full content (all KV planes + positions)
+    # before this step's writes — after scrubbing, since dst is fresh
+    cow_pages: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 2), np.int32)
+    )
+
+
+@dataclasses.dataclass
+class DecodeRun:
+    """Device-ready arrays for one fused multi-token decode run: every
+    active row decodes ``n_steps`` tokens inside a single jitted
+    ``lm.paged_decode_loop`` dispatch (sampling fused in-loop)."""
+
+    tokens: np.ndarray  # [B, 1] int32: each row's last sampled token
+    positions: np.ndarray  # [B] int32 first write position, -1 = idle row
+    page_tables: np.ndarray  # [B, P] int32, NULL_PAGE-padded
+    scrub_pages: np.ndarray  # fixed width, NULL_PAGE-padded
+    cow_pages: np.ndarray  # [W, 2] (0, 0)-padded
+    n_steps: int  # tokens every active row emits this run
+    rows: List[Optional[Request]]
 
 
 class Scheduler:
@@ -109,23 +153,64 @@ class Scheduler:
         n_pages: int,
         max_pages_per_req: int,
         prefill_chunk: int,
+        decode_block: int = 1,
+        allocator: Optional[PageAllocator] = None,
+        prefix_cache: Optional[PrefixCache] = None,
     ):
-        self.allocator = PageAllocator(n_pages, page_size)
+        if allocator is None:
+            allocator = PageAllocator(n_pages, page_size)
+        elif (allocator.n_pages, allocator.page_size) != (n_pages, page_size):
+            raise ValueError(
+                f"allocator pool ({allocator.n_pages} pages of "
+                f"{allocator.page_size}) does not match scheduler "
+                f"({n_pages} pages of {page_size})"
+            )
+        if prefix_cache is not None and prefix_cache.allocator is not allocator:
+            raise ValueError("prefix cache bound to a different allocator")
+        if decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1, got {decode_block}")
+        self.allocator = allocator
+        self.prefix = prefix_cache
         self.max_batch = max_batch
         self.max_pages_per_req = max_pages_per_req
         self.prefill_chunk = prefill_chunk
+        self.decode_block = decode_block
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.iteration = 0
         # pages committed to live requests but not yet allocated — the
         # admission guard that keeps on-demand growth failure-free
         self._committed = 0
-        # fixed scrub width: a row writing n <= prefill_chunk positions
-        # can cross at most pages_for(n) + 1 page boundaries, so this
-        # bounds fresh allocations per step for every trace shape
+        # fixed scrub widths: a row writing n positions can cross at most
+        # pages_for(n) + 1 page boundaries, bounding fresh allocations per
+        # step/run for every trace shape; CoW adds at most one duplicate
+        # per row (only the single recomputed position of a full-prefix
+        # hit can land in a shared page)
         self.scrub_width = max_batch * (
-            pages_for(prefill_chunk, page_size) + 1
+            pages_for(prefill_chunk, page_size) + 1 + 1
         )
+        self.run_scrub_width = max_batch * (
+            pages_for(decode_block, page_size) + 1 + 1
+        )
+        self.cow_width = max_batch
+        # persistent plan buffers: mutated in place every iteration
+        # instead of reallocating per tick (StepPlan/DecodeRun alias
+        # them; each plan must be consumed before the next is built)
+        b, p, c = max_batch, max_pages_per_req, prefill_chunk
+        self._tokens = np.zeros((b, c), np.int32)
+        self._positions = np.full((b, c), -1, np.int32)
+        self._tables = np.full((b, p), NULL_PAGE, np.int32)
+        self._sample_idx = np.zeros((b,), np.int32)
+        self._sample_mask = np.zeros((b,), bool)
+        self._scrub = np.full((self.scrub_width,), NULL_PAGE, np.int32)
+        self._cow = np.full((self.cow_width, 2), NULL_PAGE, np.int32)
+        self._run_tokens = np.zeros((b, 1), np.int32)
+        self._run_positions = np.full((b,), -1, np.int32)
+        self._run_scrub = np.full((self.run_scrub_width,), NULL_PAGE, np.int32)
+        self._run_cow = np.full((self.cow_width, 2), NULL_PAGE, np.int32)
+        # per-row page-table staleness: the [B, P] buffer row is only
+        # rewritten when the row's table actually changed
+        self._table_stale = [True] * b
 
     # ------------------------------------------------------------ lifecycle
 
@@ -146,53 +231,139 @@ class Scheduler:
     def _admit(self) -> None:
         """Fill free rows from the queue (FIFO among arrived requests),
         admitting only requests whose *lifetime* page needs fit in
-        free-minus-committed — growth of admitted requests never fails."""
+        free-minus-committed — growth of admitted requests never fails.
+
+        With a prefix cache attached, each candidate's prompt is matched
+        against cached pages first: hits are adopted (shared, not
+        recomputed), shrinking both the pages needed and the prefill
+        work; under pool pressure, LRU cache-only pages are evicted to
+        make room (never pages a running request still references).
+        """
         ps = self.allocator.page_size
         for slot in range(self.max_batch):
             if self.slots[slot] is not None:
                 continue
-            pick = None
+            pick, hits = None, []
             for req in self.queue:
                 if req.arrival > self.iteration:
                     continue
-                need = pages_for(req.total_positions, ps)
-                if need <= self.allocator.n_free - self._committed:
-                    pick = req
+                cand: List[int] = []
+                if self.prefix is not None:
+                    if req.hashes is None:
+                        req.hashes = page_hashes(req.prompt, ps)
+                    cand = self.prefix.match_hashes(req.hashes)
+                need = pages_for(req.total_positions, ps) - len(cand)
+                # a fully cached prompt still recomputes its last token
+                # (sampling needs its logits): that write diverges inside
+                # an adopted page, so reserve the CoW duplicate up front
+                cow_extra = 1 if len(cand) * ps > req.prompt_len - 1 else 0
+                short = (
+                    need + cow_extra
+                    - (self.allocator.n_free - self._committed)
+                )
+                if short > 0 and self.prefix is not None:
+                    self.prefix.evict(short, protect=cand)
+                if (
+                    need + cow_extra
+                    <= self.allocator.n_free - self._committed
+                ):
+                    pick, hits = req, cand
                     break
             if pick is None:
                 continue
             self.queue.remove(pick)
             self.allocator.alloc(pick.rid)
-            self._committed += pages_for(pick.total_positions, ps)
+            if hits:
+                self.allocator.adopt(pick.rid, hits)
+                pick.computed = min(len(hits) * ps, pick.prompt_len - 1)
+                pick.reg_pages = len(hits)  # digests already published
+            cow_extra = 1 if len(hits) * ps > pick.prompt_len - 1 else 0
+            self._committed += (
+                pages_for(pick.total_positions, ps) - len(hits) + cow_extra
+            )
+            pick.cow_reserved = cow_extra
+            if self.prefix is not None:
+                self.prefix.page_lookups += len(pick.hashes)
+                self.prefix.page_hits += len(hits)
+                self.prefix.tokens_total += pick.prompt_len
+                self.prefix.tokens_saved += pick.computed
             pick.state = RUNNING
             pick.slot = slot
             self.slots[slot] = pick
+            self._table_stale[slot] = True
+        if all(s is None for s in self.slots):
+            stuck = [r for r in self.queue if r.arrival <= self.iteration]
+            if stuck:
+                # nothing in flight can ever release pages and eviction
+                # already ran dry: ticking forever would just spin
+                raise RuntimeError(
+                    f"admission deadlock: request {stuck[0].rid} needs "
+                    f"{pages_for(stuck[0].total_positions, ps)} pages but "
+                    f"only {self.allocator.n_free} can ever be free "
+                    f"(pool {self.allocator.n_pages}, page_size {ps})"
+                )
 
     # ------------------------------------------------------------- planning
 
-    def plan(self) -> Optional[StepPlan]:
-        """Build the next mixed step, or None when no row has work this
-        iteration (call :meth:`tick` to advance past future arrivals)."""
+    def plan(self):
+        """Build the next unit of work, or None when no row has work this
+        iteration (call :meth:`tick` to advance past future arrivals).
+
+        Returns a :class:`StepPlan` while any active row is still in
+        prefill (mixed step, fixed ``[B, prefill_chunk]`` shape), and a
+        :class:`DecodeRun` once the whole batch is decoding (up to
+        ``decode_block`` tokens per row in one fused dispatch).
+        """
         self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return None
-        any_prefill = any(r.computed < r.prompt_len for r in active)
-        c = self.prefill_chunk if any_prefill else 1
-        b, p = self.max_batch, self.max_pages_per_req
-        ps = self.allocator.page_size
+        if any(r.computed < r.prompt_len for r in active):
+            return self._plan_mixed()
+        return self._plan_decode_run(active)
 
-        tokens = np.zeros((b, c), np.int32)
-        positions = np.full((b, c), -1, np.int32)
-        tables = np.full((b, p), NULL_PAGE, np.int32)
-        sample_idx = np.zeros((b,), np.int32)
-        sample_mask = np.zeros((b,), bool)
+    def _cow_for_write(self, req, start: int, end: int, cow_pairs, fresh):
+        """Privatize (copy-on-write) every shared page the write range
+        ``[start, end)`` touches, and release the admission-time CoW
+        reservation once the request's first write has been planned."""
+        a = self.allocator
+        ps = a.page_size
+        for idx in range(start // ps, (end - 1) // ps + 1):
+            if a.refcount(a.page_table(req.rid)[idx]) > 1:
+                pair = a.cow(req.rid, idx)
+                cow_pairs.append(pair)
+                # dst pops off the free list like any fresh page: scrub
+                # it (clears its dirty mark) before the copy lands
+                fresh.append(pair[1])
+                self._table_stale[req.slot] = True
+        if req.cow_reserved:
+            self._committed -= req.cow_reserved
+            req.cow_reserved = 0
+
+    def _sync_table_row(self, slot: int, req: Optional[Request]) -> None:
+        if not self._table_stale[slot]:
+            return
+        self._tables[slot] = NULL_PAGE
+        if req is not None:
+            t = self.allocator.page_table(req.rid)
+            self._tables[slot, : len(t)] = t
+        self._table_stale[slot] = False
+
+    def _plan_mixed(self) -> StepPlan:
+        b, c = self.max_batch, self.prefill_chunk
+        tokens, positions = self._tokens, self._positions
+        tokens[:] = 0
+        positions[:] = -1
+        self._sample_idx[:] = 0
+        self._sample_mask[:] = False
         rows: List[Optional[Request]] = [None] * b
         n_new = [0] * b
         fresh: List[int] = []
+        cow_pairs: List[tuple] = []
 
         for slot, req in enumerate(self.slots):
             if req is None:
+                self._sync_table_row(slot, None)
                 continue
             s0 = req.prompt_len
             if req.computed < s0:  # chunked prefill
@@ -209,18 +380,75 @@ class Scheduler:
             grown = self.allocator.ensure(req.rid, req.computed + n)
             self._committed -= len(grown)
             fresh.extend(grown)
-            table = self.allocator.page_table(req.rid)
-            tables[slot, : len(table)] = table
-            sample_idx[slot] = n - 1
-            sample_mask[slot] = sample
+            if grown:
+                self._table_stale[slot] = True
+            self._cow_for_write(
+                req, req.computed, req.computed + n, cow_pairs, fresh
+            )
+            self._sync_table_row(slot, req)
+            self._sample_idx[slot] = n - 1
+            self._sample_mask[slot] = sample
             rows[slot] = req
             n_new[slot] = n
         assert len(fresh) <= self.scrub_width, (fresh, self.scrub_width)
-        scrub = np.full((self.scrub_width,), NULL_PAGE, np.int32)
-        scrub[: len(fresh)] = fresh
+        assert len(cow_pairs) <= self.cow_width, (cow_pairs, self.cow_width)
+        self._scrub[:] = NULL_PAGE
+        self._scrub[: len(fresh)] = fresh
+        self._cow[:] = NULL_PAGE
+        if cow_pairs:
+            self._cow[: len(cow_pairs)] = np.asarray(cow_pairs, np.int32)
+        self.allocator.note_scrubbed(fresh)
         return StepPlan(
-            tokens, positions, tables, sample_idx, sample_mask, rows, n_new,
-            scrub,
+            tokens, positions, self._tables, self._sample_idx,
+            self._sample_mask, rows, n_new, self._scrub, self._cow,
+        )
+
+    def _plan_decode_run(self, active: List[Request]) -> DecodeRun:
+        b = self.max_batch
+        k = min(r.max_new_tokens - len(r.out) for r in active)
+        # never step past a future arrival: admission timing must match
+        # the one-token-at-a-time schedule exactly
+        future = [
+            r.arrival - self.iteration
+            for r in self.queue
+            if r.arrival > self.iteration
+        ]
+        if future:
+            k = min(k, min(future))
+        k = int(max(1, min(k, self.decode_block)))
+        tokens, positions = self._run_tokens, self._run_positions
+        tokens[:] = 0
+        positions[:] = -1
+        rows: List[Optional[Request]] = [None] * b
+        fresh: List[int] = []
+        cow_pairs: List[tuple] = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                self._sync_table_row(slot, None)
+                continue
+            tokens[slot, 0] = req.out[-1]
+            positions[slot] = req.computed
+            grown = self.allocator.ensure(req.rid, req.computed + k)
+            self._committed -= len(grown)
+            fresh.extend(grown)
+            if grown:
+                self._table_stale[slot] = True
+            self._cow_for_write(
+                req, req.computed, req.computed + k, cow_pairs, fresh
+            )
+            self._sync_table_row(slot, req)
+            rows[slot] = req
+        assert len(fresh) <= self.run_scrub_width, (fresh, self.run_scrub_width)
+        assert len(cow_pairs) <= self.cow_width, (cow_pairs, self.cow_width)
+        self._run_scrub[:] = NULL_PAGE
+        self._run_scrub[: len(fresh)] = fresh
+        self._run_cow[:] = NULL_PAGE
+        if cow_pairs:
+            self._run_cow[: len(cow_pairs)] = np.asarray(cow_pairs, np.int32)
+        self.allocator.note_scrubbed(fresh)
+        return DecodeRun(
+            tokens, positions, self._tables, self._run_scrub, self._run_cow,
+            k, rows,
         )
 
     def tick(self) -> None:
@@ -229,19 +457,53 @@ class Scheduler:
 
     # --------------------------------------------------------------- commit
 
+    def _register_prefix(self, req: Request) -> None:
+        """Publish every fully computed full prompt page to the prefix
+        cache (idempotent; adopted pages' digests are already present)."""
+        if self.prefix is None:
+            return
+        ps = self.allocator.page_size
+        limit = min(req.computed, req.prompt_len) // ps
+        table = None
+        while req.reg_pages < limit:
+            if table is None:
+                table = self.allocator.page_table(req.rid)
+            self.prefix.register(req.hashes[req.reg_pages], table[req.reg_pages])
+            req.reg_pages += 1
+
+    def _finish(self, slot: int, req: Request) -> None:
+        req.state = FINISHED
+        req.slot = None
+        self.allocator.free(req.rid)
+        self.slots[slot] = None
+        self._table_stale[slot] = True
+
     def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
         """Apply one step's results: advance positions, record sampled
-        tokens, retire finished requests (their pages return to the pool
-        and the row frees for next iteration's admission)."""
+        tokens, publish finished prompt pages, retire finished requests
+        (their non-shared pages return to the pool and the row frees for
+        next iteration's admission)."""
         self.iteration += 1
         for slot, req in enumerate(plan.rows):
             if req is None:
                 continue
             req.computed += plan.n_new[slot]
+            self._register_prefix(req)
             if plan.sample_mask[slot]:
                 req.out.append(int(sampled[slot]))
                 if len(req.out) >= req.max_new_tokens:
-                    req.state = FINISHED
-                    req.slot = None
-                    self.allocator.free(req.rid)
-                    self.slots[slot] = None
+                    self._finish(slot, req)
+
+    def commit_run(self, run: DecodeRun, sampled: np.ndarray) -> None:
+        """Apply a fused decode run: every active row advances ``n_steps``
+        positions and gains ``n_steps`` sampled tokens."""
+        k = run.n_steps
+        self.iteration += k
+        for slot, req in enumerate(run.rows):
+            if req is None:
+                continue
+            req.computed += k
+            req.out.extend(int(x) for x in sampled[slot, :k])
+            self._register_prefix(req)
+            if len(req.out) >= req.max_new_tokens:
+                self._finish(slot, req)

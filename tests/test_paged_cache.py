@@ -1,15 +1,23 @@
 """Paged KV cache tests: allocator invariants (unit + 500-case
-deterministic fuzz + hypothesis fuzz), and paged read/write parity with
-the ring-cache semantics the attention layers were built on.
+deterministic fuzz + hypothesis fuzz), refcount/CoW/sharing invariants,
+prefix-cache behavior, and paged read/write parity with the ring-cache
+semantics the attention layers were built on.
 
-The allocator invariants under arbitrary alloc/append/free interleavings:
-  * no page is ever shared by two live requests (aliasing),
+The allocator invariants under arbitrary alloc/append/share/hold/free
+interleavings:
+  * every live page's refcount equals table references + holds — no page
+    is ever freed while still referenced,
   * free ∪ live pages always partition {1..n_pages-1} (no leaks),
   * the null page 0 is never handed out,
+  * copy-on-write never mutates a shared page in place (divergent writes
+    land in a private duplicate; every sharer's stream stays intact),
+  * a page becomes dirty exactly when its last reference drops
+    (scrub-on-last-free) and is scrubbed before its next owner writes,
   * ``slot_of`` reconstructs each request's logical KV stream exactly.
 """
 
 import dataclasses
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +28,9 @@ from _hypo import HAVE_HYPOTHESIS, given, settings, st
 from repro.serve.paged_cache import (
     NULL_PAGE,
     PageAllocator,
+    PrefixCache,
     make_paged_cache,
+    page_hashes,
     pages_for,
 )
 
@@ -65,16 +75,99 @@ def test_allocator_basics():
     assert NULL_PAGE not in a.page_table("r1")
 
 
+# ------------------------------------------------- refcount / CoW units
+
+
+def test_refcount_adopt_and_cow():
+    a = PageAllocator(6, 4)
+    a.alloc("r0")
+    assert a.ensure("r0", 8) == [1, 2]
+    assert a.refcount(1) == a.refcount(2) == 1
+    a.alloc("r1")
+    a.adopt("r1", [1, 2])  # shared-prefix adoption
+    assert a.refcount(1) == a.refcount(2) == 2
+    assert a.page_table("r1") == (1, 2)
+    # divergent write into shared page 2 -> private duplicate
+    src, dst = a.cow("r1", 1)
+    assert (src, dst) == (2, 3)
+    assert a.page_table("r1") == (1, 3)
+    assert a.page_table("r0") == (1, 2)  # source table untouched
+    assert a.refcount(2) == 1 and a.refcount(3) == 1
+    assert a.cow_count == 1
+    # already-private page: no duplication
+    assert a.cow("r1", 1) is None
+    # freeing the adopter keeps r0's pages alive (refcount > 0)
+    a.free("r1")
+    assert a.refcount(1) == 1 and a.page_table("r0") == (1, 2)
+    assert a.dirty_pages() == {3}  # only the duplicate actually freed
+
+
+def test_adopt_and_hold_validation():
+    a = PageAllocator(4, 2)
+    a.alloc("r0")
+    a.ensure("r0", 2)
+    with pytest.raises(ValueError, match="non-live"):
+        a.adopt("r0", [3])
+    with pytest.raises(ValueError, match="non-live"):
+        a.hold(NULL_PAGE)
+
+
+def test_hold_keeps_page_alive_past_owner():
+    a = PageAllocator(4, 2)
+    a.alloc("r0")
+    (p,) = a.ensure("r0", 2)
+    a.hold(p)
+    a.free("r0")
+    assert a.refcount(p) == 1 and a.n_free == 2  # held: not freed
+    assert a.dirty_pages() == set()
+    a.unhold(p)
+    assert a.refcount(p) == 0 and a.n_free == 3
+    assert a.dirty_pages() == {p}  # dirty exactly on last free
+
+
+def test_cow_out_of_pages_has_no_side_effects():
+    a = PageAllocator(3, 2)  # pages 1, 2
+    a.alloc("r0")
+    a.ensure("r0", 4)
+    a.alloc("r1")
+    a.adopt("r1", list(a.page_table("r0")))
+    with pytest.raises(ValueError, match="copy-on-write"):
+        a.cow("r1", 0)
+    assert a.page_table("r1") == a.page_table("r0")
+    assert a.refcount(1) == 2
+
+
+def test_scrub_bookkeeping_roundtrip():
+    a = PageAllocator(4, 2)
+    a.alloc("r0")
+    pages = a.ensure("r0", 4)
+    a.free("r0")
+    assert a.dirty_pages() == set(pages)
+    a.note_scrubbed(pages)
+    assert a.dirty_pages() == set()
+
+
 # ------------------------------------------------- fuzz harness (shared)
 
 
-def _check_invariants(a: PageAllocator, streams: dict):
-    live_pages = [p for rid in a.live() for p in a.page_table(rid)]
-    assert len(live_pages) == len(set(live_pages)), "page aliased"
+def _check_invariants(a: PageAllocator, streams: dict, holds: Counter):
+    table_refs = Counter(p for rid in a.live() for p in a.page_table(rid))
+    live_pages = set(table_refs) | {p for p, c in holds.items() if c > 0}
     assert NULL_PAGE not in live_pages, "null page allocated"
-    assert a.n_free + len(live_pages) == a.n_pages - 1, "pages leaked"
+    # refcount == table references + external holds, for every live page
+    for p in live_pages:
+        assert a.refcount(p) == table_refs.get(p, 0) + holds.get(p, 0), p
+    # no page freed while referenced; free ∪ live partitions the pool
+    free = set(a._free)
+    assert not (free & live_pages), "page freed while refcount > 0"
+    assert a.n_free == len(free), "free list duplicates"
+    assert free | live_pages == set(range(1, a.n_pages)), "pages leaked"
+    # dirty pages are exactly tracked free pages, never live ones
+    assert a.dirty_pages() <= free, "live page marked dirty"
     for rid, stream in streams.items():
-        # reconstruct the logical stream through the page table
+        # reconstruct the logical stream through the page table — shared
+        # or private, every sharer must still see its exact values (the
+        # "CoW never mutates a shared page in place" invariant)
         for pos, val in enumerate(stream):
             page, slot = a.slot_of(rid, pos)
             assert _PHYS[(page, slot)] == val, (rid, pos)
@@ -83,16 +176,36 @@ def _check_invariants(a: PageAllocator, streams: dict):
 _PHYS = {}  # (page, slot) -> last value written; fuzz-model physical memory
 
 
+def _scrub(a: PageAllocator, pages, model_dirty):
+    """Model the jitted step's scrub of freshly handed-out pages: stale
+    physical values vanish, and the allocator is told (note_scrubbed)."""
+    for p in pages:
+        assert p in model_dirty or all(
+            (p, s) not in _PHYS for s in range(a.page_size)
+        ), f"page {p} carries stale values but was never marked dirty"
+        for s in range(a.page_size):
+            _PHYS.pop((p, s), None)
+    a.note_scrubbed(pages)
+    model_dirty.difference_update(pages)
+
+
 def _run_schedule(n_pages, page_size, ops):
     """Drive the allocator through an op schedule, modelling physical
-    writes, checking every invariant after every op.
+    writes (including CoW copies and scrubs), checking every invariant
+    after every op.
 
-    ops: list of (kind, arg) with kind in {"new", "append", "free"};
-    ``arg`` selects the target request (modulo live/total counts).
+    ops: list of (kind, arg) with kind in {"new", "append", "free",
+    "share", "hold", "unhold"}; ``arg`` selects targets (modulo counts).
+    ``share`` forks a new request off an existing one's full-page prefix
+    (adoption); an odd ``arg`` truncates the fork's logical stream by
+    one token — mimicking the full-prefix-hit recompute — so its next
+    append lands inside a shared page and must copy-on-write.
     """
     _PHYS.clear()
     a = PageAllocator(n_pages, page_size)
     streams = {}  # rid -> list of written values (the logical stream)
+    holds = Counter()  # page -> external (prefix-cache-style) holds
+    model_dirty = set()  # pages freed (refcount 0) and not yet scrubbed
     next_rid, next_val = 0, 0
     for kind, arg in ops:
         if kind == "new":
@@ -102,32 +215,86 @@ def _run_schedule(n_pages, page_size, ops):
         elif kind == "append" and streams:
             rid = sorted(streams)[arg % len(streams)]
             stream = streams[rid]
-            try:
-                a.ensure(rid, len(stream) + 1)
-            except ValueError:
-                _check_invariants(a, streams)  # failed growth: no effects
-                continue
-            page, slot = a.slot_of(rid, len(stream))
+            pos = len(stream)
+            idx = pos // page_size
+            if idx < len(a.page_table(rid)):
+                # page exists; privatize before any divergent write
+                if a.refcount(a.page_table(rid)[idx]) > 1:
+                    try:
+                        src, dst = a.cow(rid, idx)
+                    except ValueError:  # no page for the duplicate
+                        _check_invariants(a, streams, holds)
+                        continue
+                    _scrub(a, [dst], model_dirty)
+                    for s in range(page_size):
+                        if (src, s) in _PHYS:
+                            _PHYS[(dst, s)] = _PHYS[(src, s)]
+            else:
+                try:
+                    grown = a.ensure(rid, pos + 1)
+                except ValueError:
+                    _check_invariants(a, streams, holds)  # no effects
+                    continue
+                _scrub(a, grown, model_dirty)
+            page, slot = a.slot_of(rid, pos)
+            assert a.refcount(page) == 1, "write into a shared page"
             _PHYS[(page, slot)] = next_val
             stream.append(next_val)
             next_val += 1
         elif kind == "free" and streams:
             rid = sorted(streams)[arg % len(streams)]
+            before = a.page_table(rid)
             a.free(rid)
             del streams[rid]
-        _check_invariants(a, streams)
+            # scrub-on-last-free: exactly the pages whose refcount hit 0
+            model_dirty.update(p for p in before if a.refcount(p) == 0)
+        elif kind == "share" and streams:
+            src_rid = sorted(streams)[arg % len(streams)]
+            n_full = len(streams[src_rid]) // page_size
+            if n_full == 0:
+                continue
+            m = 1 + (arg // len(streams)) % n_full
+            trunc = arg % 2  # odd: fork recomputes its "last token"
+            if m * page_size - trunc < 1:
+                continue
+            a.alloc(next_rid)
+            a.adopt(next_rid, a.page_table(src_rid)[:m])
+            streams[next_rid] = list(
+                streams[src_rid][: m * page_size - trunc]
+            )
+            next_rid += 1
+        elif kind == "hold" and a.live():
+            pages = [p for r in a.live() for p in a.page_table(r)]
+            if pages:
+                p = pages[arg % len(pages)]
+                a.hold(p)
+                holds[p] += 1
+        elif kind == "unhold" and +holds:
+            held = sorted(p for p, c in holds.items() if c > 0)
+            p = held[arg % len(held)]
+            before = a.refcount(p)
+            a.unhold(p)
+            holds[p] -= 1
+            if before == 1:
+                model_dirty.add(p)
+        _check_invariants(a, streams, holds)
+        assert a.dirty_pages() == model_dirty, "dirty-set drift"
+
+
+_OP_KINDS = ["new", "append", "append", "append", "free",
+             "share", "share", "hold", "unhold"]
 
 
 def _random_ops(rng, n_ops):
-    kinds = rng.choice(["new", "append", "append", "append", "free"], n_ops)
+    kinds = rng.choice(_OP_KINDS, n_ops)
     args = rng.integers(0, 64, n_ops)
     return list(zip(kinds.tolist(), args.tolist()))
 
 
 def test_allocator_fuzz_deterministic():
-    """500 seeded random alloc/append/free interleavings over small pools
-    (tight pools force recycling and out-of-pages paths) — always runs,
-    independent of hypothesis availability."""
+    """500 seeded random alloc/append/share/hold/free interleavings over
+    small pools (tight pools force recycling, CoW, and out-of-pages
+    paths) — always runs, independent of hypothesis availability."""
     for seed in range(500):
         rng = np.random.default_rng(seed)
         n_pages = int(rng.integers(2, 9))
@@ -141,7 +308,7 @@ def test_allocator_fuzz_deterministic():
     page_size=st.integers(min_value=1, max_value=4),
     ops=st.lists(
         st.tuples(
-            st.sampled_from(["new", "append", "append", "free"]),
+            st.sampled_from(_OP_KINDS),
             st.integers(min_value=0, max_value=63),
         ),
         max_size=40,
@@ -152,6 +319,50 @@ def test_allocator_fuzz_hypothesis(n_pages, page_size, ops):
     to minimal interleavings); skips when hypothesis is not installed
     (tests/_hypo.py optional-skip pattern)."""
     _run_schedule(n_pages, page_size, ops)
+
+
+# ----------------------------------------------------- prefix cache units
+
+
+def test_page_hashes_chained():
+    ps = 4
+    a = np.arange(12, dtype=np.int32)
+    b = a.copy()
+    b[1] = 99  # diverge inside page 0
+    ha, hb = page_hashes(a, ps), page_hashes(b, ps)
+    assert len(ha) == 3
+    # chaining: identical later pages still hash differently after an
+    # earlier divergence (no cross-prompt aliasing)
+    assert all(x != y for x, y in zip(ha, hb))
+    # partial trailing page is never hashed
+    assert len(page_hashes(a[:11], ps)) == 2
+    assert page_hashes(a[:11], ps) == ha[:2]
+
+
+def test_prefix_cache_match_register_evict():
+    a = PageAllocator(8, 2)
+    pc = PrefixCache(a)
+    prompt = np.arange(6, dtype=np.int32)
+    hashes = page_hashes(prompt, 2)
+    a.alloc("r0")
+    pages = a.ensure("r0", 6)
+    for h, p in zip(hashes, pages):
+        pc.register(h, p)
+    assert len(pc) == 3 and all(a.refcount(p) == 2 for p in pages)
+    a.free("r0")  # cache holds keep every page alive
+    assert all(a.refcount(p) == 1 for p in pages)
+    # full match; longest-prefix semantics on divergence
+    assert pc.match(prompt) == pages
+    div = prompt.copy()
+    div[3] = 42
+    assert pc.match(div) == pages[:1]
+    # eviction respects protect and frees LRU-first
+    assert pc.evict(1, protect=pages) == 0  # everything protected
+    freed = pc.evict(2)
+    assert freed == 2 and len(pc) == 1
+    # remaining entry is the most recently used chain head... the two
+    # oldest (LRU) entries were dropped and their pages are free again
+    assert a.n_free == 6
 
 
 # --------------------------------------------- paged read/write vs ring

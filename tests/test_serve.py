@@ -664,3 +664,155 @@ def test_auto_mode_falls_back_for_recurrent_families():
     bad = Engine(params, cfg, ServeConfig(max_seq=48, prefill_mode="batched"))
     with pytest.raises(ValueError, match="recurrent"):
         bad.generate(prompts, 1)
+
+
+# -------------------------------------- shared-prefix caching (byte-exact)
+
+
+def _prefix_workload(vocab, ps=8, seed=11):
+    """Three prompts sharing a 2-full-page (16-token) system prefix with
+    distinct tails — the canonical shared-system-prompt workload."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, (2 * ps,)).astype(np.int32)
+    tails = [rng.integers(0, vocab, (t,)).astype(np.int32) for t in (3, 6, 1)]
+    return [np.concatenate([prefix, t]) for t in tails]
+
+
+def _serve_kwargs(wire, kv):
+    kw = dict(
+        prefill_mode="continuous", max_seq=48,
+        page_size=8, max_batch=2, prefill_chunk=4,
+    )
+    kw.update(_wire_kwargs(wire))
+    if kv == "int8":
+        kw["kv_dtype"] = "int8"
+    return kw
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+@pytest.mark.parametrize("wire", ["native", "int8"])
+@pytest.mark.parametrize("kv", ["native", "int8"])
+def test_shared_prefix_byte_identical_to_cold_start(arch, wire, kv):
+    """Prefix-cache hits must be invisible in the tokens: a prompt whose
+    leading pages are adopted from an earlier request decodes
+    byte-identically to a cold start, across GQA/MLA, the int8 weight
+    wire, and the int8 KV cache (stored pages are reused as BYTES, so
+    quantized caches hit exactly like f32 ones)."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prefix_workload(cfg.vocab)
+    kw = _serve_kwargs(wire, kv)
+    cold = Engine(params, cfg, ServeConfig(prefix_cache=False, **kw))
+    cold_outs = cold.generate_requests(prompts, 5)
+    warm = Engine(params, cfg, ServeConfig(**kw))
+    # seed the cache, then serve the sharing prompts in a second call
+    np.testing.assert_array_equal(
+        warm.generate_requests(prompts[:1], 5)[0], cold_outs[0]
+    )
+    warm_outs = warm.generate_requests(prompts[1:], 5)
+    stats = warm.prefix_stats()
+    assert stats["page_hits"] > 0, "workload never hit the prefix cache"
+    assert stats["prefill_tokens_saved"] >= 2 * 16  # both shared pages
+    for i in (1, 2):
+        np.testing.assert_array_equal(
+            warm_outs[i - 1], cold_outs[i],
+            err_msg=f"request {i} diverged after a prefix-cache hit "
+                    f"({arch}, wire={wire}, kv={kv})",
+        )
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+def test_shared_prefix_byte_identical_fused(arch):
+    """Same guarantee under the fused in-kernel page walk with the int8
+    KV wire: shared pages are safe to read through the Pallas kernel's
+    page-table traversal (page ids may repeat across rows)."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prefix_workload(cfg.vocab)
+    kw = _serve_kwargs("native", "int8")
+    kw["paged_attn"] = "fused"
+    cold_outs = Engine(
+        params, cfg, ServeConfig(prefix_cache=False, **kw)
+    ).generate_requests(prompts, 5)
+    warm = Engine(params, cfg, ServeConfig(**kw))
+    warm.generate_requests(prompts[:1], 5)
+    warm_outs = warm.generate_requests(prompts[1:], 5)
+    assert warm.prefix_stats()["page_hits"] > 0
+    for i in (1, 2):
+        np.testing.assert_array_equal(warm_outs[i - 1], cold_outs[i])
+
+
+def test_shared_prefix_full_hit_triggers_cow():
+    """A prompt FULLY covered by cached pages recomputes only its last
+    token; that write diverges inside a shared page and must
+    copy-on-write — the original request's pages stay byte-identical
+    (its re-decode still matches) and exactly one duplication happens."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(7).integers(0, cfg.vocab, (16,)).astype(np.int32)
+    eng = Engine(params, cfg, ServeConfig(**_serve_kwargs("native", "native")))
+    cold = eng.generate_requests([prompt], 5)[0]
+    warm = eng.generate_requests([prompt], 5)[0]  # full-prefix hit
+    np.testing.assert_array_equal(cold, warm)
+    alloc = eng._cont["allocator"]
+    assert alloc.cow_count == 1, "full-prefix hit should CoW exactly once"
+    assert eng.prefix_stats()["prefill_tokens_saved"] == 15  # s0 - 1
+    # third pass: unchanged entries, same tokens again
+    np.testing.assert_array_equal(eng.generate_requests([prompt], 5)[0], cold)
+
+
+def test_prefix_cache_disabled_is_cold_every_call():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(8).integers(0, cfg.vocab, (16,)).astype(np.int32)
+    eng = Engine(params, cfg, ServeConfig(
+        prefix_cache=False, **{k: v for k, v in _serve_kwargs("native", "native").items()
+                               if k != "prefix_cache"}
+    ))
+    a = eng.generate_requests([prompt], 4)[0]
+    b = eng.generate_requests([prompt], 4)[0]
+    np.testing.assert_array_equal(a, b)
+    stats = eng.prefix_stats()
+    assert stats["page_hits"] == 0 and stats["prefill_tokens_saved"] == 0
+
+
+# ------------------------------------------- step-loop shape discipline
+
+
+def test_continuous_compiles_exactly_two_traces():
+    """The bucketed plan shapes hold the continuous loop to TWO compiled
+    model traces — one mixed [B, prefill_chunk] step, one fused decode
+    loop — across mixed prompt lengths, staggered arrivals, queue churn,
+    varying run lengths, and repeated generate_requests calls."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32,
+        page_size=8, max_batch=2, prefill_chunk=4, decode_block=8,
+    ))
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32) for s in (9, 5, 12)
+    ]
+    eng.generate_requests(prompts, 6, arrivals=[0, 3, 1])
+    eng.generate_requests(prompts[:2], 3)
+    eng.generate_requests([prompts[2]], 9)
+    assert eng.paged_compiles == 2, (
+        f"continuous loop compiled {eng.paged_compiles} traces; the "
+        "bucketing policy promises 2 (docs/serving.md)"
+    )
+    assert eng.decode_run_calls > 0 and eng.fused_tokens > 0
+
+
+def test_decode_block_one_matches_larger_blocks():
+    """decode_block=1 (one dispatch per token) and decode_block=16 (fused
+    runs) are the same math: byte-identical outputs."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prefix_workload(cfg.vocab)
+    kw = dict(prefill_mode="continuous", max_seq=48, page_size=8,
+              max_batch=2, prefill_chunk=4, prefix_cache=False)
+    out_1 = Engine(params, cfg, ServeConfig(decode_block=1, **kw)).generate_requests(prompts, 6)
+    out_16 = Engine(params, cfg, ServeConfig(decode_block=16, **kw)).generate_requests(prompts, 6)
+    for a, b in zip(out_1, out_16):
+        np.testing.assert_array_equal(a, b)
