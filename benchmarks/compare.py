@@ -50,6 +50,10 @@ TRACKED_RATIOS = (
     # serving throughput: continuous batching vs one-shot batched prefill
     # (benchmarks/serve_bench.py)
     "continuous_vs_oneshot_throughput",
+    # robustness: completed / submitted on the 2x-oversubscribed
+    # overload workload — an exact property of preemption + typed
+    # outcomes (must stay 1.0; serve_bench.bench_overload)
+    "overload_completion_ratio",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get

@@ -139,6 +139,47 @@ def bench_prefix_cache(params, cfg, b):
     ]
 
 
+def bench_overload(params, cfg, passes):
+    """2x pool-oversubscribed workload through the robust serving API.
+
+    Six requests whose lifetime page needs are twice the pool's capacity
+    arrive at once: the scheduler must queue, age, preempt-and-recompute
+    — and still complete every request (typed outcomes, no exceptions).
+    ``overload_completion_ratio`` = completed / submitted is an exact
+    property of the robustness machinery (gated at 1.0 in
+    benchmarks/compare.py TRACKED_RATIOS); preemption and queue counters
+    ride along for the trajectory."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32)
+        for s in (16, 12, 18, 14, 16, 13)
+    ]
+    n_new = 16
+    # each request needs 2-3 pages of 16 for prompt+16 new tokens
+    # (~13 data pages total); 7 pages incl. the null page is ~2x
+    # oversubscribed, so at most two requests ever coexist
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=64, page_size=16,
+        max_batch=4, max_pages=7, prefill_chunk=8,
+        prefix_cache=False, preempt_after=2,
+    ))
+    results = eng.serve_requests(prompts, n_new)  # warmup/compile
+    s = _time_once(lambda: eng.serve_requests(prompts, n_new), passes)
+    results = eng.serve_requests(prompts, n_new)
+    completed = sum(r.ok for r in results)
+    health = eng.health()
+    tok = sum(r.n_generated for r in results)
+    return [
+        {"impl": "serve_overload_2x", "us": round(s * 1e6, 1),
+         "tokens_per_s": round(tok / s, 1),
+         "preemptions": health["preemptions"],
+         "queue_high_water": health["queue_high_water"]},
+        {"overload_completion_ratio": round(completed / len(results), 3)},
+    ]
+
+
 def bench_serve(smoke: bool = False):
     from repro import configs
     from repro.models import lm
@@ -202,6 +243,7 @@ def bench_serve(smoke: bool = False):
         # benchmarks/compare.py (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
         *bench_prefix_cache(params, cfg, b),
+        *bench_overload(params, cfg, passes),
         *kv_rows,
         {"shape": [b, s0, n_new], "prefill_chunk": 8, "page_size": 16},
     ]
@@ -252,11 +294,103 @@ def check_prefix(path: str = "BENCH_kernels.json") -> int:
     return 1 if failures else 0
 
 
+def check_chaos(n_seeds: int = 12) -> int:
+    """CI smoke gate for fault isolation: seeded chaos over a 2x
+    oversubscribed pool — injected allocator failures, one forced
+    fused-kernel failure, one NaN-poisoned request per seed, free-page
+    scribbles.  Fails if any engine exception escapes, any request comes
+    back without a typed outcome, or any *healthy* request's tokens
+    differ from the fault-free reference run (tests/test_faults.py runs
+    the same fuzz at 200 seeds under ``-m chaos``).  Returns a process
+    exit code."""
+    from repro import configs
+    from repro.models import lm
+    from repro.serve import faults
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True),
+        vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32",
+    )
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32)
+        for s in (9, 5, 12, 7, 10, 6)
+    ]
+    n_tok = 8
+    skw = dict(
+        prefill_mode="continuous", max_seq=48, page_size=4,
+        max_batch=3, max_pages=13, prefill_chunk=4, preempt_after=3,
+    )
+    ref_eng = Engine(params, cfg, ServeConfig(
+        max_seq=48, prefill_mode="stepped"
+    ))
+    ref = [ref_eng.generate(p[None], n_tok)[0] for p in prompts]
+    failures = []
+    eng = Engine(params, cfg, ServeConfig(**skw))
+    for seed in range(n_seeds):
+        victim = eng._rid + 1 + (seed % len(prompts))
+        eng.set_faults(faults.FaultConfig(
+            seed=seed, alloc_fail_p=0.05, nan_rids=(victim,),
+            scrub_corrupt_p=0.1,
+        ))
+        try:
+            res = eng.serve_requests(prompts, n_tok)
+        except Exception as exc:  # the one thing that must never happen
+            failures.append(f"seed {seed}: engine raised {exc!r}")
+            break
+        for i, r in enumerate(res):
+            if r.finish_reason == "length":
+                if not np.array_equal(r.tokens, ref[i]):
+                    failures.append(
+                        f"seed {seed}: healthy request {i} corrupted"
+                    )
+            elif r.finish_reason != "numerical_error":
+                failures.append(
+                    f"seed {seed}: request {i} untyped/unexpected "
+                    f"outcome {r.finish_reason!r}"
+                )
+    # forced fused-kernel failure -> one-way gather fallback, byte-exact
+    fcfg = dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, paged_attn="fused")
+    )
+    feng = Engine(params, fcfg, ServeConfig(**skw))
+    feng.set_faults(faults.FaultConfig(seed=0, fail_fused=True))
+    try:
+        fres = feng.serve_requests(prompts, n_tok)
+        if feng.fallbacks != 1:
+            failures.append(f"fused fallback count {feng.fallbacks} != 1")
+        for i, r in enumerate(fres):
+            if not (r.ok and np.array_equal(r.tokens, ref[i])):
+                failures.append(
+                    f"fused-fallback request {i} not byte-exact "
+                    f"({r.finish_reason})"
+                )
+    except Exception as exc:
+        failures.append(f"fused fault: engine raised {exc!r}")
+    for line in failures:
+        print(f"check-chaos FAIL: {line}")
+    if not failures:
+        h = eng.health()
+        print(
+            f"check-chaos ok: {n_seeds} seeds, "
+            f"alloc_faults={h.get('injected_alloc_faults', 0)} "
+            f"nan_poisons={h.get('injected_nan_poisons', 0)} "
+            f"scribbles={h.get('injected_scribbles', 0)} "
+            f"preemptions={h.get('preemptions', 0)} "
+            f"fused_fallbacks={feng.fallbacks}"
+        )
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
     import sys
 
     if "--check-prefix" in sys.argv:
         args = [a for a in sys.argv[1:] if a != "--check-prefix"]
         sys.exit(check_prefix(*args[:1]))
+    if "--check-chaos" in sys.argv:
+        sys.exit(check_chaos())
     for row in bench_serve(smoke="--smoke" in sys.argv)[0]:
         print(row)

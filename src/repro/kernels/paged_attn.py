@@ -297,6 +297,13 @@ def paged_attn_cache_layer(
     planes included) and resolves ``interpret="auto"`` to the Pallas
     interpreter on non-TPU backends — the fallback rule that keeps CPU
     CI running the real kernel body (docs/serving.md)."""
+    # chaos hook: a scoped fault injector (serve/faults.py) may force a
+    # one-shot trace-time failure here, exercising the engine's logged
+    # fallback to the gather path; no-op in production (local import —
+    # serve/ depends on kernels/, not the reverse)
+    from repro.serve.faults import check_fused
+
+    check_fused()
     if interpret == "auto":
         interpret = jax.default_backend() != "tpu"
     return paged_attn_fused(

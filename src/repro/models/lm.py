@@ -418,8 +418,12 @@ def paged_decode_loop(params, cache, tokens, positions, page_tables,
     run (the scheduler pre-allocates every page the run will touch), so
     it is applied once up front, not per iteration.
 
-    Returns (sampled [B, max_steps] int32, new_cache); entries past
-    ``n_steps`` are zeros.
+    Returns (sampled [B, max_steps] int32, bad_at [B] int32, new_cache);
+    sampled entries past ``n_steps`` are zeros.  ``bad_at`` is the in-loop
+    numerical watchdog: per row, the FIRST loop index whose sampled
+    logits contained a non-finite value (``max_steps`` when the whole
+    run was clean) — the scheduler quarantines poisoned rows and keeps
+    only their pre-fault tokens (serve/scheduler.py ``commit_run``).
     """
     if cfg.family in ("ssm", "hybrid"):
         raise ValueError(
@@ -432,26 +436,32 @@ def paged_decode_loop(params, cache, tokens, positions, page_tables,
     v = cfg.vocab  # slice off vocab padding before argmax
 
     def body(i, carry):
-        cache, toks, pos, out = carry
+        cache, toks, pos, out, bad_at = carry
         logits, cache = paged_step(
             params, cache, toks, pos[:, None], page_tables, cfg
         )
-        nxt = jnp.argmax(logits[:, 0, :v], axis=-1).astype(jnp.int32)
+        row = logits[:, 0, :v]
+        nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
         out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
         # Idle rows (pos < 0) must keep feeding the SAME (token 0, -1)
         # padding the host-driven mixed step feeds, not their own garbage
         # argmax — every iteration's batch then matches the one-call-per-
         # token schedule input-for-input, keeping runs byte-exact.
         active = pos >= 0
+        # watchdog: record the first iteration with non-finite logits on
+        # an active row (earlier marks win; idle rows are never flagged)
+        bad = active & ~jnp.all(jnp.isfinite(row), axis=-1)
+        bad_at = jnp.where(bad & (bad_at == max_steps), i, bad_at)
         nxt = jnp.where(active, nxt, 0)
         pos = jnp.where(active, pos + 1, pos)
-        return cache, nxt[:, None], pos, out
+        return cache, nxt[:, None], pos, out, bad_at
 
     out0 = jnp.zeros((b, max_steps), jnp.int32)
-    cache, _, _, out = jax.lax.fori_loop(
-        0, n_steps, body, (cache, tokens, positions, out0)
+    bad0 = jnp.full((b,), max_steps, jnp.int32)
+    cache, _, _, out, bad_at = jax.lax.fori_loop(
+        0, n_steps, body, (cache, tokens, positions, out0, bad0)
     )
-    return out, cache
+    return out, bad_at, cache
 
 
 def prefill(params, tokens, cfg, cache=None):

@@ -34,7 +34,8 @@ drops the final state), and serving correctness beats speed there.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import logging
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,8 +43,16 @@ import numpy as np
 
 from repro.core import dbb
 from repro.models import common, encdec, lm
-from repro.serve import paged_cache
-from repro.serve.scheduler import DecodeRun, Request, Scheduler
+from repro.serve import faults, paged_cache
+from repro.serve.scheduler import (
+    FINISH_LENGTH,
+    FINISH_REJECTED_TOO_LARGE,
+    DecodeRun,
+    Request,
+    Scheduler,
+)
+
+logger = logging.getLogger(__name__)
 
 # Families whose cache lm.prefill fills exactly (pure attention caches).
 # The continuous/paged path shares this set: both need attention-only
@@ -97,6 +106,15 @@ class ServeConfig:
     ``models/attention.py``.  Orthogonal to ``wire_dtype`` (it needs no
     weight packing); see docs/quantization.md.
 
+    ``max_queue``/``backpressure``/``preempt_after`` bound overload
+    behavior (continuous mode): at most ``max_queue`` requests wait for
+    admission — overflow arrivals are finished ``rejected_capacity``
+    (``backpressure="reject"``) or held back until the queue drains
+    (``"block"``); ``preempt_after=N`` lets a request stuck waiting N
+    iterations preempt the youngest running request, whose pages are
+    released and output recomputed on readmission — byte-identical to an
+    uninterrupted run (docs/serving.md "Robustness").
+
     ``paged_attn`` picks the continuous-mode attention implementation:
     ``"gather"`` materializes each request's logical window
     (``attention.paged_read`` + ``mha``), ``"fused"`` walks the page
@@ -121,8 +139,24 @@ class ServeConfig:
     paged_attn: str = "auto"  # auto | gather | fused (paged attention impl)
     decode_block: int = 16  # max tokens per fused decode dispatch
     prefix_cache: bool = True  # shared-prefix page reuse across calls
+    # --- robustness (docs/serving.md "Robustness") ---
+    max_queue: Optional[int] = None  # bounded admission queue (None = ∞)
+    backpressure: str = "reject"  # queue-full policy: reject | block
+    preempt_after: Optional[int] = None  # aging preemption threshold
 
     def __post_init__(self):
+        if self.backpressure not in ("reject", "block"):
+            raise ValueError(
+                f"unknown backpressure {self.backpressure!r}; reject|block"
+            )
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1, got {self.max_queue}"
+            )
+        if self.preempt_after is not None and self.preempt_after < 1:
+            raise ValueError(
+                f"preempt_after must be >= 1, got {self.preempt_after}"
+            )
         if self.kv_dtype not in ("native", "int8"):
             raise ValueError(
                 f"unknown kv_dtype {self.kv_dtype!r}; native|int8"
@@ -164,6 +198,29 @@ class ServeConfig:
         if self.max_pages is not None:
             return self.max_pages
         return self.max_batch * self.pages_per_request + 1
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Typed per-request outcome of :meth:`Engine.serve_requests`.
+
+    ``finish_reason`` is always set: ``"length"`` (completed), or one of
+    the degraded outcomes — ``"rejected_too_large"``,
+    ``"rejected_capacity"``, ``"deadline_exceeded"``, ``"cancelled"``,
+    ``"numerical_error"`` (quarantined).  ``tokens`` is ``prompt ‖
+    generated`` (the prompt alone when nothing was generated), so
+    callers never special-case failures to read output.
+    """
+
+    rid: int
+    tokens: np.ndarray  # prompt ‖ generated, [S0 + len(out)] int32
+    n_generated: int
+    finish_reason: str
+    preemptions: int = 0  # times preempted-and-recomputed along the way
+
+    @property
+    def ok(self) -> bool:
+        return self.finish_reason == FINISH_LENGTH
 
 
 def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
@@ -249,6 +306,35 @@ class Engine:
         if sp is not cfg.sparsity:
             cfg = dataclasses.replace(cfg, sparsity=sp)
         self.cfg = cfg
+        self._build_jitted()
+        # dispatch instrumentation (see tests/test_serve.py): python-level
+        # calls into the jitted prefill/decode/paged-step functions
+        self.prefill_calls = 0
+        self.decode_calls = 0
+        self.step_calls = 0  # continuous dispatches (mixed steps + runs)
+        self.decode_run_calls = 0  # fused decode runs among step_calls
+        self.fused_tokens = 0  # tokens emitted inside fused runs
+        # continuous-mode state that persists across generate_requests
+        # calls: allocator + device cache (so prefix-cached pages stay
+        # warm) and the prefix cache itself; built lazily on first use
+        self._cont = None
+        # request ids must be unique across calls: the persistent
+        # allocator keys page tables by rid
+        self._rid = 0
+        # fallback compile counter: distinct dispatch signatures seen
+        # (mirrors jit cache size when ``_cache_size`` is unavailable)
+        self._step_shapes = set()
+        # --- robustness state (docs/serving.md "Robustness") ---
+        self._injector: Optional[faults.FaultInjector] = None
+        self.fallbacks = 0  # fused paged_attn -> gather rebuilds
+        self._health: Dict[str, int] = {}  # scheduler stats, accumulated
+
+    def _build_jitted(self) -> None:
+        """(Re)build every jitted entry point against ``self.cfg``.
+        Called once at construction and again by the one-way fused->
+        gather fallback, which swaps ``cfg.sparsity.paged_attn`` and
+        must re-trace."""
+        cfg, scfg = self.cfg, self.scfg
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
         )
@@ -273,28 +359,53 @@ class Engine:
                 scrub_pages=scrub, cow_pages=cow,
             )
         )
+        # sampling fused with the non-finite-logit watchdog: one dispatch
+        # returns (token, row-is-clean) per row, so quarantine detection
+        # costs no extra Python->XLA round trip
         self._sample_at = jax.jit(
-            lambda logits, idx: jnp.argmax(
-                logits[jnp.arange(logits.shape[0]), idx, :v], axis=-1
-            ).astype(jnp.int32)
+            lambda logits, idx: (
+                jnp.argmax(
+                    logits[jnp.arange(logits.shape[0]), idx, :v], axis=-1
+                ).astype(jnp.int32),
+                jnp.all(
+                    jnp.isfinite(
+                        logits[jnp.arange(logits.shape[0]), idx, :v]
+                    ),
+                    axis=-1,
+                ),
+            )
         )
-        # dispatch instrumentation (see tests/test_serve.py): python-level
-        # calls into the jitted prefill/decode/paged-step functions
-        self.prefill_calls = 0
-        self.decode_calls = 0
-        self.step_calls = 0  # continuous dispatches (mixed steps + runs)
-        self.decode_run_calls = 0  # fused decode runs among step_calls
-        self.fused_tokens = 0  # tokens emitted inside fused runs
-        # continuous-mode state that persists across generate_requests
-        # calls: allocator + device cache (so prefix-cached pages stay
-        # warm) and the prefix cache itself; built lazily on first use
-        self._cont = None
-        # request ids must be unique across calls: the persistent
-        # allocator keys page tables by rid
-        self._rid = 0
-        # fallback compile counter: distinct dispatch signatures seen
-        # (mirrors jit cache size when ``_cache_size`` is unavailable)
-        self._step_shapes = set()
+        # fault-injection helpers (no-ops unless an injector is set):
+        # poison NaNs into selected logits rows / scribble garbage into a
+        # free page of the paged cache (valid-looking slot positions —
+        # the scrub-on-hand-out discipline must make it unobservable)
+        self._poison = jax.jit(
+            lambda logits, mask: jnp.where(
+                mask[:, None, None],
+                jnp.asarray(jnp.nan, logits.dtype),
+                logits,
+            )
+        )
+        ps = scfg.page_size
+
+        def scribble(cache, page):
+            out = dict(cache)
+            out["pos"] = cache["pos"].at[page].set(
+                jnp.arange(ps, dtype=jnp.int32)
+            )
+            for key in ("k", "v"):
+                leaf = cache[key]
+                out[key] = leaf.at[:, page].set(
+                    jnp.asarray(7, leaf.dtype)
+                )
+            for key in ("k_scale", "v_scale"):
+                if key in cache:
+                    out[key] = cache[key].at[:, page].set(
+                        jnp.asarray(1e3, cache[key].dtype)
+                    )
+            return out
+
+        self._scribble = jax.jit(scribble)
 
     def _next_rid(self) -> int:
         self._rid += 1
@@ -314,6 +425,57 @@ class Engine:
             except Exception:
                 return len(self._step_shapes)
         return n
+
+    def set_faults(self, fcfg: Optional[faults.FaultConfig]) -> None:
+        """Arm (or with ``None`` disarm) seeded fault injection for
+        subsequent continuous-mode calls (serve/faults.py).  The
+        allocator hook installs on the persistent paged pool; kernel
+        hooks activate only around this engine's own dispatches."""
+        self._injector = (
+            None if fcfg is None else faults.FaultInjector(fcfg)
+        )
+        if self._cont is not None:
+            self._cont["allocator"].fault_hook = (
+                None if self._injector is None
+                else self._injector.alloc_hook
+            )
+
+    def health(self) -> Dict[str, int]:
+        """Robustness counters accumulated across continuous-mode calls:
+        preemptions, quarantines, per-reason finish counts, queue depth
+        high-water, fused->gather fallbacks, and (when fault injection is
+        armed) fired-fault counts.  Surfaced by serve_bench."""
+        out = dict(self._health)
+        out["fused_fallbacks"] = self.fallbacks
+        if self._injector is not None:
+            out["injected_alloc_faults"] = self._injector.alloc_faults
+            out["injected_fused_faults"] = self._injector.fused_faults
+            out["injected_nan_poisons"] = self._injector.nan_poisons
+            out["injected_scribbles"] = self._injector.scribbles
+        return out
+
+    def _merge_health(self, stats: Dict[str, int]) -> None:
+        for key, val in stats.items():
+            if key == "queue_high_water":
+                self._health[key] = max(self._health.get(key, 0), val)
+            else:
+                self._health[key] = self._health.get(key, 0) + val
+
+    def _fallback_to_gather(self, err: Exception) -> None:
+        """One-way logged fallback: the fused paged-attention kernel
+        failed (at trace time, so no device state changed) — rebuild
+        every jitted entry point on the gather path and retry.  Never
+        switches back within this engine's lifetime."""
+        if self.cfg.sparsity.paged_attn == "gather":
+            raise err  # the fallback itself failed: that IS a bug
+        logger.warning(
+            "fused paged_attn kernel failed (%s); falling back to the "
+            "gather path one-way", err,
+        )
+        self.fallbacks += 1
+        sp = dataclasses.replace(self.cfg.sparsity, paged_attn="gather")
+        self.cfg = dataclasses.replace(self.cfg, sparsity=sp)
+        self._build_jitted()
 
     def prefix_stats(self) -> dict:
         """Prefix-cache statistics (zeros until continuous mode ran with
@@ -395,6 +557,36 @@ class Engine:
 
     # --------------------------------------------- continuous batching
 
+    def _validate_request(self, i: int, prompt, n_tok: int) -> np.ndarray:
+        """Shape/size checks for one request; raises ValueError naming
+        the request index (``generate_requests`` runs this over the FULL
+        list before queueing anything, so a bad entry can never strand
+        earlier requests mid-list)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] < 1:
+            raise ValueError(f"request {i}: empty prompt")
+        if n_tok < 1:
+            raise ValueError(f"request {i}: n_tokens must be >= 1")
+        total = prompt.shape[0] + n_tok - 1
+        if total > self.scfg.max_seq:
+            raise ValueError(
+                f"request {i}: prompt {prompt.shape[0]} + {n_tok} "
+                f"new tokens needs {total} cache positions, "
+                f"max_seq={self.scfg.max_seq}"
+            )
+        return prompt
+
+    @staticmethod
+    def _per_request(name, val, n, default):
+        out = (
+            [default if val is None else val] * n
+            if val is None or np.isscalar(val)
+            else list(val)
+        )
+        if len(out) != n:
+            raise ValueError(f"{name} has {len(out)} entries for {n} prompts")
+        return out
+
     def generate_requests(
         self,
         prompts: Sequence[np.ndarray],
@@ -417,24 +609,61 @@ class Engine:
         byte-identical per request to the stepped engine (the parity
         suite enforces this).
 
+        The whole list is validated up front: an oversized/malformed
+        entry raises ``ValueError`` before ANY request is queued.  For
+        per-request degraded outcomes instead of exceptions — deadlines,
+        cancellation, bounded-queue rejection — use
+        :meth:`serve_requests`.
+
         The paged cache, allocator, and prefix cache persist across
         calls (``prefix_cache=True``): prompts sharing full pages with
         earlier requests — same call or earlier calls — skip prefill for
         those pages (docs/serving.md).
         """
+        n = len(prompts)
+        n_list = self._per_request("n_tokens", n_tokens, n, None)
+        arr_list = self._per_request("arrivals", arrivals, n, 0)
+        clean = [
+            self._validate_request(i, p, n_list[i])
+            for i, p in enumerate(prompts)
+        ]
+        reqs = [
+            Request(
+                rid=self._next_rid(), prompt=p,
+                max_new_tokens=n_list[i], arrival=arr_list[i],
+            )
+            for i, p in enumerate(clean)
+        ]
+        self._serve(reqs)
+        return [req.tokens() for req in reqs]
+
+    def serve_requests(
+        self,
+        prompts: Sequence[np.ndarray],
+        n_tokens,
+        arrivals: Optional[Sequence[int]] = None,
+        deadlines: Optional[Sequence[Optional[int]]] = None,
+        cancel_at: Optional[Sequence[Optional[int]]] = None,
+    ) -> List[RequestResult]:
+        """Robust continuous serving: every request gets a typed
+        :class:`RequestResult`, never an engine exception.
+
+        Oversized requests (prompt + n_tokens beyond ``max_seq`` or the
+        per-request page table) come back ``rejected_too_large`` without
+        touching the scheduler.  ``deadlines``/``cancel_at`` are absolute
+        scheduler iterations: a request still unfinished when its
+        iteration is reached finishes ``deadline_exceeded``/
+        ``cancelled`` with whatever it generated so far.  Queue overflow
+        under ``max_queue`` follows the ``backpressure`` policy
+        (docs/serving.md "Robustness")."""
         scfg = self.scfg
         n = len(prompts)
-        n_list = [n_tokens] * n if isinstance(n_tokens, int) else list(n_tokens)
-        arr_list = [0] * n if arrivals is None else list(arrivals)
-        if len(n_list) != n:
-            raise ValueError(
-                f"n_tokens has {len(n_list)} entries for {n} prompts"
-            )
-        if len(arr_list) != n:
-            raise ValueError(
-                f"arrivals has {len(arr_list)} entries for {n} prompts"
-            )
-        reqs = []
+        n_list = self._per_request("n_tokens", n_tokens, n, None)
+        arr_list = self._per_request("arrivals", arrivals, n, 0)
+        dl_list = self._per_request("deadlines", deadlines, n, None)
+        cx_list = self._per_request("cancel_at", cancel_at, n, None)
+        slots: List[Optional[Request]] = []
+        results: List[Optional[RequestResult]] = []
         for i, prompt in enumerate(prompts):
             prompt = np.asarray(prompt, np.int32).reshape(-1)
             if prompt.shape[0] < 1:
@@ -442,18 +671,47 @@ class Engine:
             if n_list[i] < 1:
                 raise ValueError(f"request {i}: n_tokens must be >= 1")
             total = prompt.shape[0] + n_list[i] - 1
-            if total > scfg.max_seq:
-                raise ValueError(
-                    f"request {i}: prompt {prompt.shape[0]} + {n_list[i]} "
-                    f"new tokens needs {total} cache positions, "
-                    f"max_seq={scfg.max_seq}"
+            if (
+                total > scfg.max_seq
+                or paged_cache.pages_for(
+                    prompt.shape[0] + max(0, n_list[i] - 1), scfg.page_size
+                ) > scfg.pages_per_request
+            ):
+                slots.append(None)
+                results.append(
+                    RequestResult(
+                        rid=self._next_rid(), tokens=prompt,
+                        n_generated=0,
+                        finish_reason=FINISH_REJECTED_TOO_LARGE,
+                    )
                 )
-            reqs.append(
+                continue
+            slots.append(
                 Request(
                     rid=self._next_rid(), prompt=prompt,
                     max_new_tokens=n_list[i], arrival=arr_list[i],
+                    deadline=dl_list[i], cancel_at=cx_list[i],
                 )
             )
+            results.append(None)
+        self._serve([r for r in slots if r is not None])
+        for i, req in enumerate(slots):
+            if req is None:
+                continue
+            results[i] = RequestResult(
+                rid=req.rid, tokens=req.tokens(),
+                n_generated=len(req.out),
+                finish_reason=req.finish_reason or FINISH_LENGTH,
+                preemptions=req.preemptions,
+            )
+        return results
+
+    def _serve(self, reqs: Sequence[Request]) -> None:
+        """Run the continuous loop until every request in ``reqs`` has a
+        terminal outcome.  Dispatch errors from an injected fused-kernel
+        fault trigger the one-way gather fallback and a retry; per-row
+        numerical faults quarantine only their row."""
+        scfg = self.scfg
         if self._cont is None:
             allocator = paged_cache.PageAllocator(
                 scfg.total_pages, scfg.page_size
@@ -468,6 +726,8 @@ class Engine:
                     self.cfg, scfg.total_pages, scfg.page_size
                 ),
             }
+            if self._injector is not None:
+                allocator.fault_hook = self._injector.alloc_hook
         cont = self._cont
         sched = Scheduler(
             max_batch=scfg.max_batch,
@@ -478,11 +738,19 @@ class Engine:
             decode_block=scfg.decode_block,
             allocator=cont["allocator"],
             prefix_cache=cont["prefix"],
+            max_queue=scfg.max_queue,
+            backpressure=scfg.backpressure,
+            preempt_after=scfg.preempt_after,
         )
         for req in reqs:
             sched.add(req)
+        inj = self._injector
         cache = cont["cache"]
         while sched.has_work():
+            if inj is not None:
+                page = inj.scribble_page(cont["allocator"].free_pages())
+                if page is not None:
+                    cache = self._scribble(cache, jnp.int32(page))
             plan = sched.plan()
             if plan is None:  # only future arrivals left: advance time
                 sched.tick()
@@ -492,23 +760,45 @@ class Engine:
                 self.decode_run_calls += 1
                 self.fused_tokens += plan.n_steps
                 self._step_shapes.add(("run",))
-                sampled, cache = self._decode_run(
+                args = (
                     self.params, cache,
                     jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
                     jnp.asarray(plan.page_tables),
                     jnp.asarray(plan.scrub_pages),
                     jnp.asarray(plan.cow_pages), jnp.int32(plan.n_steps),
                 )
-                sched.commit_run(plan, np.asarray(sampled))
+                try:
+                    with faults.scoped(inj):
+                        sampled, bad_at, cache = self._decode_run(*args)
+                except faults.FusedKernelFault as err:
+                    self._fallback_to_gather(err)
+                    with faults.scoped(inj):
+                        sampled, bad_at, cache = self._decode_run(*args)
+                sched.commit_run(
+                    plan, np.asarray(sampled), bad_at=np.asarray(bad_at)
+                )
                 continue
             self._step_shapes.add(("step",) + plan.tokens.shape)
-            logits, cache = self._paged_step(
+            args = (
                 self.params, cache,
                 jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
                 jnp.asarray(plan.page_tables), jnp.asarray(plan.scrub_pages),
                 jnp.asarray(plan.cow_pages),
             )
-            sampled = self._sample_at(logits, jnp.asarray(plan.sample_idx))
-            sched.commit(plan, np.asarray(sampled))
+            try:
+                with faults.scoped(inj):
+                    logits, cache = self._paged_step(*args)
+            except faults.FusedKernelFault as err:
+                self._fallback_to_gather(err)
+                with faults.scoped(inj):
+                    logits, cache = self._paged_step(*args)
+            if inj is not None:
+                mask = inj.poison_mask(plan.rows, plan.sample_mask)
+                if mask is not None:
+                    logits = self._poison(logits, jnp.asarray(mask))
+            sampled, ok = self._sample_at(
+                logits, jnp.asarray(plan.sample_idx)
+            )
+            sched.commit(plan, np.asarray(sampled), ok=np.asarray(ok))
         cont["cache"] = cache
-        return [req.tokens() for req in reqs]
+        self._merge_health(sched.stats())

@@ -1,0 +1,189 @@
+"""Seeded fault injection for the continuous serving loop.
+
+S2TA's serving stack argues for *statically bounded* execution — fixed
+plan shapes, lifetime page reservation, exactly two compiled traces.
+This module supplies the matching *bounded failure* story: seeded chaos
+hooks that make the loop's "can't happen" paths happen on demand, so the
+recovery machinery (preempt-and-recompute, gather fallback, per-row
+quarantine — serve/scheduler.py + serve/engine.py) is exercised
+deterministically in tests and CI instead of only in production
+incidents.
+
+Four hooks, all driven by one ``numpy`` PRNG seeded from
+:class:`FaultConfig.seed` (every chaos run is reproducible):
+
+* **Allocator failure** (``alloc_fail_p``) — ``PageAllocator.ensure`` /
+  ``cow`` raise :class:`InjectedAllocFault` with probability ``p`` per
+  growth, simulating pool exhaustion the admission guard normally makes
+  impossible.  The scheduler responds by *preempting* the victim request
+  (release pages, re-queue, recompute on readmission) — never by
+  crashing the engine.
+* **Fused-kernel failure** (``fail_fused``) — the fused paged-attention
+  kernel (``kernels/paged_attn.paged_attn_cache_layer``) raises
+  :class:`FusedKernelFault` at trace time.  The engine logs a one-way
+  fallback to the gather path and retries the dispatch.
+* **NaN logits** (``nan_rids``) — the engine poisons the listed
+  requests' logits rows with NaN at their first sampling step; the
+  non-finite-logit watchdog must quarantine exactly those rows
+  (``finish_reason="numerical_error"``) while co-batched healthy rows
+  stay byte-identical to a fault-free run (per-row batch invariance).
+* **Page-scrub corruption** (``scrub_corrupt_p``) — garbage (finite
+  values, *valid-looking* slot positions) is scribbled into a currently
+  free page between steps.  Harmless by construction: free pages are
+  referenced by no page table, and every freshly handed-out page is
+  scrubbed inside the jitted step before its first write — so corrupted
+  free pages must never influence any output byte.
+
+The fused-kernel hook is reached from kernel code, which must not know
+about engines, so it reads a module-level *scoped* injector: the engine
+activates its injector only around its own jitted dispatches
+(:func:`scoped`), so a fault-free reference engine sharing the process
+never trips another engine's faults.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class FaultError(RuntimeError):
+    """Base class for injected faults (never raised by real code paths)."""
+
+
+class InjectedAllocFault(FaultError):
+    """Injected page-allocator failure (simulated pool exhaustion)."""
+
+
+class FusedKernelFault(FaultError):
+    """Injected fused paged-attention kernel failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """What to inject, and with which seed (see module docstring)."""
+
+    seed: int = 0
+    alloc_fail_p: float = 0.0  # P(InjectedAllocFault) per ensure/cow growth
+    fail_fused: bool = False  # force the fused kernel to fail (once)
+    nan_rids: Tuple[int, ...] = ()  # rids whose first sampled logits go NaN
+    scrub_corrupt_p: float = 0.0  # P(scribble a free page) per step
+
+    def __post_init__(self):
+        for name in ("alloc_fail_p", "scrub_corrupt_p"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+
+
+class FaultInjector:
+    """Stateful driver for one :class:`FaultConfig` (one PRNG stream).
+
+    The engine owns one injector per ``set_faults`` call; counters record
+    what actually fired so tests/benches can assert coverage.
+    """
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self._fused_pending = cfg.fail_fused
+        self._poisoned: set = set()
+        # fired-fault counters (surfaced via Engine.health())
+        self.alloc_faults = 0
+        self.fused_faults = 0
+        self.nan_poisons = 0
+        self.scribbles = 0
+
+    # ------------------------------------------------------ allocator hook
+
+    def alloc_hook(self, need: int) -> None:
+        """Installed as ``PageAllocator.fault_hook``: raises before any
+        page is popped, so injected failures are side-effect free."""
+        if self.cfg.alloc_fail_p and self._rng.random() < self.cfg.alloc_fail_p:
+            self.alloc_faults += 1
+            raise InjectedAllocFault(
+                f"injected allocator failure (need={need}, "
+                f"p={self.cfg.alloc_fail_p}, seed={self.cfg.seed})"
+            )
+
+    # --------------------------------------------------- fused-kernel hook
+
+    def check_fused(self) -> None:
+        """Called from ``paged_attn_cache_layer`` while this injector is
+        :func:`scoped` active.  Fires once: the engine's fallback to the
+        gather path is one-way, so a second trip could only mask a bug in
+        the fallback itself."""
+        if self._fused_pending:
+            self._fused_pending = False
+            self.fused_faults += 1
+            raise FusedKernelFault(
+                f"injected fused paged_attn kernel failure "
+                f"(seed={self.cfg.seed})"
+            )
+
+    # ------------------------------------------------------- logits poison
+
+    def poison_mask(self, rows, sample_mask) -> Optional[np.ndarray]:
+        """Rows of this step whose logits should go NaN: listed rids, at
+        their first sampling step only.  None when nothing fires."""
+        if not self.cfg.nan_rids:
+            return None
+        mask = np.zeros((len(rows),), bool)
+        for slot, req in enumerate(rows):
+            if (
+                req is not None
+                and sample_mask[slot]
+                and req.rid in self.cfg.nan_rids
+                and req.rid not in self._poisoned
+            ):
+                self._poisoned.add(req.rid)
+                mask[slot] = True
+                self.nan_poisons += 1
+        return mask if mask.any() else None
+
+    # ------------------------------------------------------ page scribbles
+
+    def scribble_page(self, free_pages: Sequence[int]) -> Optional[int]:
+        """A free page to corrupt this step, or None.  Never the null
+        page (free lists exclude it by construction)."""
+        if not self.cfg.scrub_corrupt_p or not free_pages:
+            return None
+        if self._rng.random() >= self.cfg.scrub_corrupt_p:
+            return None
+        self.scribbles += 1
+        return int(free_pages[self._rng.integers(len(free_pages))])
+
+
+# ------------------------------------------------- scoped active injector
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+class scoped:
+    """Context manager activating ``injector`` for kernel-level hooks
+    (:func:`check_fused`) during one engine dispatch.  ``None`` is a
+    no-op scope, so call sites need no branching."""
+
+    def __init__(self, injector: Optional[FaultInjector]):
+        self._injector = injector
+
+    def __enter__(self):
+        global _ACTIVE
+        self._prev = _ACTIVE
+        if self._injector is not None:
+            _ACTIVE = self._injector
+        return self._injector
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = self._prev
+        return False
+
+
+def check_fused() -> None:
+    """Kernel-side hook: no-op unless an injector is scoped active AND
+    armed to fail the fused kernel (see ``kernels/paged_attn.py``)."""
+    if _ACTIVE is not None:
+        _ACTIVE.check_fused()

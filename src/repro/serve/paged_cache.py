@@ -91,6 +91,10 @@ class PageAllocator:
         # have not been invalidated on device yet (never live pages)
         self._dirty: set = set()
         self.cow_count = 0  # lifetime copy-on-write duplications (stats)
+        # chaos hook (serve/faults.py): called with the growth size before
+        # any page is popped in ensure()/cow(); an injected raise therefore
+        # leaves the allocator untouched.  None in production.
+        self.fault_hook = None
 
     # ------------------------------------------------------------- queries
 
@@ -115,6 +119,11 @@ class PageAllocator:
     def dirty_pages(self) -> frozenset:
         """Free pages still carrying a previous owner's slot positions."""
         return frozenset(self._dirty)
+
+    def free_pages(self) -> Tuple[int, ...]:
+        """Snapshot of the free list (fault injection picks scribble
+        targets here — free pages are unreferenced by construction)."""
+        return tuple(self._free)
 
     def slot_of(self, rid, pos: int) -> Tuple[int, int]:
         """Physical (page_id, slot) of logical position ``pos``."""
@@ -149,6 +158,9 @@ class PageAllocator:
         need = pages_for(n_tokens, self.page_size) - len(table)
         if need <= 0:
             return []
+        if self.fault_hook is not None:
+            self.fault_hook(need)  # may raise InjectedAllocFault: no pages
+            # were popped yet, so the injected failure is side-effect free
         if need > len(self._free):
             raise ValueError(
                 f"out of KV pages: request {rid!r} needs {need} more, "
@@ -198,6 +210,8 @@ class PageAllocator:
         src = table[idx]
         if self._refs[src] == 1:
             return None
+        if self.fault_hook is not None:
+            self.fault_hook(1)  # before the pop: injected raise is clean
         if not self._free:
             raise ValueError(
                 f"out of KV pages: request {rid!r} needs a copy-on-write "

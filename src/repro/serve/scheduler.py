@@ -1,6 +1,8 @@
 """Continuous-batching scheduler: iteration-level admission over a paged
 KV cache, chunked-prefill interleaved with in-flight decodes, fused
-multi-token decode runs, and shared-prefix page reuse.
+multi-token decode runs, shared-prefix page reuse — and bounded failure:
+preempt-and-recompute under pool pressure, typed per-request outcomes,
+and per-row quarantine instead of engine exceptions.
 
 Orca-style iteration-level scheduling (PAPERS.md): instead of one
 batched-prefill call per prompt batch followed by lock-step decode, every
@@ -25,8 +27,38 @@ Memory is managed by the page allocator (serve/paged_cache.py): requests
 are **admitted** only when the pool can cover their full lifetime
 (prompt + max_new_tokens), accounting for the outstanding growth of
 already-running requests — so on-demand ``ensure`` growth during decode
-can never fail mid-flight (no preemption needed), while pages are still
-allocated incrementally as positions are written.
+can never fail mid-flight.  When growth *is* made to fail anyway (fault
+injection, serve/faults.py), the victim is **preempted**, never the
+engine killed.
+
+**Preempt-and-recompute.**  Preemption releases every page of the victim
+(after publishing its fully computed prompt pages to the prefix cache,
+so readmission re-adopts instead of re-prefilling them), resets
+``computed`` to zero, and re-queues the request at the tail.  On
+readmission the request replays its *fed stream* — ``prompt ‖ out[:-1]``
+— through the normal chunked-prefill path **without sampling** (every
+token it would sample is already known), then resumes decode by feeding
+``out[-1]`` at position :attr:`Request.fed_len`.  Greedy decode over
+recomputed KV is deterministic, so a preempted request's final output is
+byte-identical to an uninterrupted run (tests/test_faults.py).  Two
+triggers: an injected allocator fault mid-plan, and *aging* — with
+``preempt_after=N``, an admissible-size request stuck waiting ``N``
+iterations preempts the youngest running request (most recent
+``admitted_at``; the victim must itself have run at least ``N``
+iterations, bounding thrash to one preemption per admission round).
+
+**Typed outcomes.**  A request always ends with a ``finish_reason``:
+``"length"`` (completed), ``"deadline_exceeded"``, ``"cancelled"``,
+``"rejected_capacity"`` (can never fit, or bounded queue full under the
+``reject`` policy), or ``"numerical_error"`` (quarantined — the engine's
+non-finite-logit watchdog flagged the row; its pages are freed and
+scrubbed, co-batched rows are untouched thanks to per-row batch
+invariance).  Unsatisfiable admission no longer raises: where the old
+deadlock check killed the engine, stuck requests are now finished as
+``rejected_capacity``.  The queue is bounded (``max_queue``) with a
+backpressure policy: ``"reject"`` finishes overflow arrivals as
+``rejected_capacity``; ``"block"`` holds them in the arrival buffer
+until the queue drains (their effective arrival is delayed).
 
 **Shared-prefix reuse.**  With a :class:`~repro.serve.paged_cache.
 PrefixCache` attached, admission matches the prompt's full pages against
@@ -44,17 +76,19 @@ Token-stream contract (mirrors the stepped engine exactly):
   * decode feeds generated token ``g_i`` at position ``s0+i`` and samples
     ``g_{i+1}``; a request finishes after ``max_new_tokens`` samples.
 The parity suite (tests/test_serve.py) asserts byte-identical tokens per
-request against the stepped path — including prefix-cache hits, which
-must be byte-identical to a cold start.
+request against the stepped path — including prefix-cache hits and
+preempted requests, which must be byte-identical to cold/uninterrupted
+runs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serve.faults import InjectedAllocFault
 from repro.serve.paged_cache import (
     NULL_PAGE,
     PageAllocator,
@@ -65,6 +99,29 @@ from repro.serve.paged_cache import (
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
+# Terminal per-request outcomes (Request.finish_reason / RequestResult).
+FINISH_LENGTH = "length"  # completed all max_new_tokens samples
+FINISH_DEADLINE = "deadline_exceeded"
+FINISH_CANCELLED = "cancelled"
+FINISH_REJECTED_CAPACITY = "rejected_capacity"
+FINISH_REJECTED_TOO_LARGE = "rejected_too_large"  # set by the engine
+FINISH_NUMERICAL = "numerical_error"  # quarantined by the NaN watchdog
+
+FINISH_REASONS = (
+    FINISH_LENGTH,
+    FINISH_DEADLINE,
+    FINISH_CANCELLED,
+    FINISH_REJECTED_CAPACITY,
+    FINISH_REJECTED_TOO_LARGE,
+    FINISH_NUMERICAL,
+)
+
+
+class SchedulerInvariantError(RuntimeError):
+    """An internal scheduler invariant was violated (a bug, not a user
+    error).  Raised instead of ``assert`` so the guard survives
+    ``python -O`` and names the plan state that tripped it."""
+
 
 @dataclasses.dataclass
 class Request:
@@ -74,11 +131,19 @@ class Request:
     prompt: np.ndarray  # [S0] int32
     max_new_tokens: int
     arrival: int = 0  # scheduler iteration at which the request appears
+    deadline: Optional[int] = None  # last iteration it may still run
+    cancel_at: Optional[int] = None  # iteration at which it is cancelled
     # -- runtime state --
     computed: int = 0  # cache positions written so far (prompt + fed decodes)
     out: List[int] = dataclasses.field(default_factory=list)
     state: str = WAITING
     slot: Optional[int] = None  # batch row while RUNNING
+    finish_reason: Optional[str] = None  # terminal outcome (FINISH_*)
+    preemptions: int = 0  # times preempted (pages released, re-queued)
+    committed: int = 0  # this request's share of the pool's committed pages
+    admitted_at: int = -1  # iteration of the most recent admission
+    wait_since: int = 0  # iteration it (re)entered the queue
+    cancelled: bool = False  # host-initiated cancel (see Scheduler.cancel)
     # -- prefix-cache state --
     hashes: Optional[List[str]] = None  # chained full-page prompt hashes
     reg_pages: int = 0  # prompt pages already published to the cache
@@ -94,6 +159,20 @@ class Request:
         prompt plus every fed decode token (the last sampled token is
         never fed back)."""
         return self.prompt_len + max(0, self.max_new_tokens - 1)
+
+    @property
+    def fed_len(self) -> int:
+        """Positions of the request's *fed stream* — prompt plus every
+        already-sampled token except the last (which is fed next).  After
+        preemption, replay re-prefills exactly ``fed_len`` positions
+        without sampling, then decode resumes feeding ``out[-1]`` here."""
+        return self.prompt_len + max(0, len(self.out) - 1)
+
+    def fed_tokens(self) -> np.ndarray:
+        """``prompt ‖ out[:-1]`` — the stream replayed after preemption."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out[:-1], np.int32)]
+        ).astype(np.int32)
 
     def tokens(self) -> np.ndarray:
         """prompt ‖ generated — the stepped engine's output layout."""
@@ -156,6 +235,9 @@ class Scheduler:
         decode_block: int = 1,
         allocator: Optional[PageAllocator] = None,
         prefix_cache: Optional[PrefixCache] = None,
+        max_queue: Optional[int] = None,
+        backpressure: str = "reject",
+        preempt_after: Optional[int] = None,
     ):
         if allocator is None:
             allocator = PageAllocator(n_pages, page_size)
@@ -169,18 +251,39 @@ class Scheduler:
             raise ValueError("prefix cache bound to a different allocator")
         if decode_block < 1:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
+        if backpressure not in ("reject", "block"):
+            raise ValueError(
+                f"unknown backpressure {backpressure!r}; reject|block"
+            )
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if preempt_after is not None and preempt_after < 1:
+            raise ValueError(
+                f"preempt_after must be >= 1, got {preempt_after}"
+            )
         self.allocator = allocator
         self.prefix = prefix_cache
         self.max_batch = max_batch
         self.max_pages_per_req = max_pages_per_req
         self.prefill_chunk = prefill_chunk
         self.decode_block = decode_block
+        self.max_queue = max_queue
+        self.backpressure = backpressure
+        self.preempt_after = preempt_after
         self.slots: List[Optional[Request]] = [None] * max_batch
+        # arrival buffer (not yet visible) -> bounded queue (admissible)
+        self.pending: List[Request] = []
         self.queue: List[Request] = []
         self.iteration = 0
         # pages committed to live requests but not yet allocated — the
         # admission guard that keeps on-demand growth failure-free
         self._committed = 0
+        # ---- robustness stats (merged into Engine.health()) ----
+        self.preemptions = 0  # total (pressure + fault-driven)
+        self.preemptions_fault = 0  # of which: injected allocator faults
+        self.quarantines = 0  # rows finished by the NaN watchdog
+        self.queue_high_water = 0  # max bounded-queue depth observed
+        self.finished_by_reason: Dict[str, int] = {}
         # fixed scrub widths: a row writing n positions can cross at most
         # pages_for(n) + 1 page boundaries, bounding fresh allocations per
         # step/run for every trace shape; CoW adds at most one duplicate
@@ -223,40 +326,196 @@ class Scheduler:
                 f"{req.max_new_tokens} new tokens needs {need} pages, page "
                 f"table holds {self.max_pages_per_req} (page_size {ps})"
             )
-        self.queue.append(req)
+        self.pending.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of ``rid`` (pending, queued, or running).
+        Takes effect at the next reap; returns False for unknown/finished
+        rids."""
+        for req in self.pending + self.queue + [
+            r for r in self.slots if r is not None
+        ]:
+            if req.rid == rid:
+                req.cancelled = True
+                return True
+        return False
 
     def has_work(self) -> bool:
-        return any(r is not None for r in self.slots) or bool(self.queue)
+        return (
+            any(r is not None for r in self.slots)
+            or bool(self.queue)
+            or bool(self.pending)
+        )
+
+    def stats(self) -> Dict[str, int]:
+        """Robustness counters (Engine.health() accumulates these)."""
+        out = {
+            "preemptions": self.preemptions,
+            "preemptions_fault": self.preemptions_fault,
+            "quarantines": self.quarantines,
+            "queue_high_water": self.queue_high_water,
+        }
+        for reason in FINISH_REASONS:
+            out[f"finished_{reason}"] = self.finished_by_reason.get(reason, 0)
+        return out
+
+    # ------------------------------------------------- abort / preempt paths
+
+    def _abort(self, req: Request, reason: str) -> None:
+        """Finish ``req`` with a non-``length`` outcome wherever it lives
+        (pending, queue, or a batch row), releasing any held pages."""
+        if req in self.pending:
+            self.pending.remove(req)
+        if req in self.queue:
+            self.queue.remove(req)
+        if req.state == RUNNING:
+            self._register_prefix(req)  # computed prompt pages stay useful
+            self.allocator.free(req.rid)
+            self._committed -= req.committed
+            req.committed = 0
+            slot = req.slot
+            self.slots[slot] = None
+            self._table_stale[slot] = True
+        req.state = FINISHED
+        req.slot = None
+        req.finish_reason = reason
+        self.finished_by_reason[reason] = (
+            self.finished_by_reason.get(reason, 0) + 1
+        )
+
+    def preempt(self, req: Request, *, fault: bool = False) -> None:
+        """Preempt-and-recompute: publish ``req``'s fully computed prompt
+        pages to the prefix cache (readmission re-adopts them), release
+        every page, reset progress, and re-queue at the TAIL — so the
+        victim cannot immediately reclaim the pages it just gave up."""
+        if req.state != RUNNING:
+            raise SchedulerInvariantError(
+                f"preempt of non-running request {req.rid} "
+                f"(state={req.state!r})"
+            )
+        self._register_prefix(req)
+        self.allocator.free(req.rid)
+        self._committed -= req.committed
+        req.committed = 0
+        slot = req.slot
+        self.slots[slot] = None
+        self._table_stale[slot] = True
+        req.slot = None
+        req.state = WAITING
+        req.computed = 0
+        req.cow_reserved = 0
+        # pages it published are cache-held; readmission re-adopts them
+        # (reg_pages is re-derived from the adoption hit count there)
+        req.reg_pages = 0
+        req.preemptions += 1
+        req.wait_since = self.iteration
+        self.preemptions += 1
+        if fault:
+            self.preemptions_fault += 1
+        self.queue.append(req)
+
+    def _reap(self) -> None:
+        """Pre-admission housekeeping: apply cancellations and deadline
+        expiries, then move arrived requests from the arrival buffer into
+        the bounded queue (backpressure policy decides overflow)."""
+        it = self.iteration
+        for req in (
+            list(self.pending)
+            + list(self.queue)
+            + [r for r in self.slots if r is not None]
+        ):
+            if req.state == FINISHED:
+                continue
+            if req.cancelled or (
+                req.cancel_at is not None and it >= req.cancel_at
+            ):
+                self._abort(req, FINISH_CANCELLED)
+            elif req.deadline is not None and it >= req.deadline:
+                self._abort(req, FINISH_DEADLINE)
+        for req in list(self.pending):
+            if req.arrival > it:
+                continue
+            if self.max_queue is not None and len(self.queue) >= self.max_queue:
+                if self.backpressure == "reject":
+                    self._abort(req, FINISH_REJECTED_CAPACITY)
+                # "block": stays in the arrival buffer; its effective
+                # arrival is delayed until the queue drains
+                continue
+            self.pending.remove(req)
+            req.wait_since = it
+            self.queue.append(req)
+        self.queue_high_water = max(self.queue_high_water, len(self.queue))
+
+    def _admission_shape(self, req: Request, hits: int):
+        """(need, cow_extra) for admitting ``req`` with ``hits`` adopted
+        prefix pages.  ``cap`` is the position of its first write: the
+        last prompt token for a fresh request (sampling needs its
+        logits), the full fed stream for a preempted replay (nothing is
+        re-sampled).  A CoW duplicate is reserved only when that first
+        write lands inside an adopted page."""
+        ps = self.allocator.page_size
+        cap = req.fed_len if req.out else req.prompt_len - 1
+        need = pages_for(req.total_positions, ps) - hits
+        cow_extra = 1 if hits * ps > cap else 0
+        return need, cow_extra, cap
+
+    def _preempt_for_starvation(self, waiter: Request) -> bool:
+        """Aging preemption: ``waiter`` has been stuck ``preempt_after``
+        iterations, so evict the youngest running request — IF its
+        reclaimable pages would actually cover the waiter's shortfall,
+        and it has itself run at least ``preempt_after`` iterations
+        (anti-thrash: a request cannot ping-pong every round)."""
+        runners = [r for r in self.slots if r is not None]
+        if not runners:
+            return False
+        victim = max(runners, key=lambda r: (r.admitted_at, r.rid))
+        if victim is waiter:
+            return False
+        if self.iteration - victim.admitted_at < self.preempt_after:
+            return False
+        a = self.allocator
+        reclaim = victim.committed + sum(
+            1 for p in a.page_table(victim.rid) if a.refcount(p) == 1
+        )
+        hits = 0
+        if self.prefix is not None and waiter.hashes is not None:
+            hits = len(self.prefix.match_hashes(waiter.hashes))
+        need, cow_extra, _ = self._admission_shape(waiter, hits)
+        short = need + cow_extra - (a.n_free - self._committed)
+        if short <= 0 or reclaim < short:
+            return False
+        self.preempt(victim)
+        return True
 
     def _admit(self) -> None:
         """Fill free rows from the queue (FIFO among arrived requests),
         admitting only requests whose *lifetime* page needs fit in
-        free-minus-committed — growth of admitted requests never fails.
+        free-minus-committed — growth of admitted requests never fails
+        (absent injected faults, which preempt instead).
 
         With a prefix cache attached, each candidate's prompt is matched
         against cached pages first: hits are adopted (shared, not
         recomputed), shrinking both the pages needed and the prefill
         work; under pool pressure, LRU cache-only pages are evicted to
         make room (never pages a running request still references).
+
+        Requests that can never fit — even with the pool otherwise idle
+        and the cache fully evicted — finish as ``rejected_capacity``
+        instead of deadlocking the loop.
         """
         ps = self.allocator.page_size
+        preempted_this_round = False
         for slot in range(self.max_batch):
             if self.slots[slot] is not None:
                 continue
             pick, hits = None, []
             for req in self.queue:
-                if req.arrival > self.iteration:
-                    continue
                 cand: List[int] = []
                 if self.prefix is not None:
                     if req.hashes is None:
                         req.hashes = page_hashes(req.prompt, ps)
                     cand = self.prefix.match_hashes(req.hashes)
-                need = pages_for(req.total_positions, ps) - len(cand)
-                # a fully cached prompt still recomputes its last token
-                # (sampling needs its logits): that write diverges inside
-                # an adopted page, so reserve the CoW duplicate up front
-                cow_extra = 1 if len(cand) * ps > req.prompt_len - 1 else 0
+                need, cow_extra, cap = self._admission_shape(req, len(cand))
                 short = (
                     need + cow_extra
                     - (self.allocator.n_free - self._committed)
@@ -269,39 +528,52 @@ class Scheduler:
                 ):
                     pick, hits = req, cand
                     break
+                if (
+                    not preempted_this_round
+                    and self.preempt_after is not None
+                    and self.iteration - req.wait_since >= self.preempt_after
+                    and self._preempt_for_starvation(req)
+                ):
+                    preempted_this_round = True
+                    need, cow_extra, cap = self._admission_shape(
+                        req, len(cand)
+                    )
+                    if (
+                        need + cow_extra
+                        <= self.allocator.n_free - self._committed
+                    ):
+                        pick, hits = req, cand
+                        break
             if pick is None:
                 continue
             self.queue.remove(pick)
             self.allocator.alloc(pick.rid)
+            need, cow_extra, cap = self._admission_shape(pick, len(hits))
             if hits:
                 self.allocator.adopt(pick.rid, hits)
-                pick.computed = min(len(hits) * ps, pick.prompt_len - 1)
+                pick.computed = min(len(hits) * ps, cap)
                 pick.reg_pages = len(hits)  # digests already published
-            cow_extra = 1 if len(hits) * ps > pick.prompt_len - 1 else 0
-            self._committed += (
-                pages_for(pick.total_positions, ps) - len(hits) + cow_extra
-            )
+            pick.committed = need + cow_extra
+            self._committed += pick.committed
             pick.cow_reserved = cow_extra
             if self.prefix is not None:
                 self.prefix.page_lookups += len(pick.hashes)
                 self.prefix.page_hits += len(hits)
                 self.prefix.tokens_total += pick.prompt_len
-                self.prefix.tokens_saved += pick.computed
+                self.prefix.tokens_saved += min(
+                    pick.computed, pick.prompt_len
+                )
             pick.state = RUNNING
             pick.slot = slot
+            pick.admitted_at = self.iteration
             self.slots[slot] = pick
             self._table_stale[slot] = True
-        if all(s is None for s in self.slots):
-            stuck = [r for r in self.queue if r.arrival <= self.iteration]
-            if stuck:
-                # nothing in flight can ever release pages and eviction
-                # already ran dry: ticking forever would just spin
-                raise RuntimeError(
-                    f"admission deadlock: request {stuck[0].rid} needs "
-                    f"{pages_for(stuck[0].total_positions, ps)} pages but "
-                    f"only {self.allocator.n_free} can ever be free "
-                    f"(pool {self.allocator.n_pages}, page_size {ps})"
-                )
+        if all(s is None for s in self.slots) and self.queue:
+            # nothing is running, eviction already ran dry, and no queued
+            # request fits: no future release can ever help, so these are
+            # typed per-request rejections — never an engine exception
+            for req in list(self.queue):
+                self._abort(req, FINISH_REJECTED_CAPACITY)
 
     # ------------------------------------------------------------- planning
 
@@ -314,11 +586,12 @@ class Scheduler:
         :class:`DecodeRun` once the whole batch is decoding (up to
         ``decode_block`` tokens per row in one fused dispatch).
         """
+        self._reap()
         self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return None
-        if any(r.computed < r.prompt_len for r in active):
+        if any(r.computed < r.fed_len for r in active):
             return self._plan_mixed()
         return self._plan_decode_run(active)
 
@@ -338,6 +611,7 @@ class Scheduler:
                 self._table_stale[req.slot] = True
         if req.cow_reserved:
             self._committed -= req.cow_reserved
+            req.committed -= req.cow_reserved
             req.cow_reserved = 0
 
     def _sync_table_row(self, slot: int, req: Optional[Request]) -> None:
@@ -349,7 +623,24 @@ class Scheduler:
             self._tables[slot, : len(t)] = t
         self._table_stale[slot] = False
 
-    def _plan_mixed(self) -> StepPlan:
+    def _grow_for_write(self, req, end: int, fresh, cow_pairs) -> None:
+        """Allocate pages backing positions up to ``end`` and privatize
+        shared pages in the write range.  An injected allocator fault
+        (``ensure``/``cow`` raise before popping, so allocator state is
+        clean) propagates to the planner, which preempts the victim;
+        the caller must then drop this request's partial ``cow_pairs``
+        entries — its pages are freed, so a device copy into them would
+        clobber a page a later row may pop fresh this same step."""
+        slot = req.slot
+        grown = self.allocator.ensure(req.rid, end)
+        self._committed -= len(grown)
+        req.committed -= len(grown)
+        fresh.extend(grown)
+        if grown:
+            self._table_stale[slot] = True
+        self._cow_for_write(req, req.computed, end, cow_pairs, fresh)
+
+    def _plan_mixed(self) -> Optional[StepPlan]:
         b, c = self.max_batch, self.prefill_chunk
         tokens, positions = self._tokens, self._positions
         tokens[:] = 0
@@ -365,11 +656,17 @@ class Scheduler:
             if req is None:
                 self._sync_table_row(slot, None)
                 continue
-            s0 = req.prompt_len
-            if req.computed < s0:  # chunked prefill
-                n = min(c, s0 - req.computed)
-                tokens[slot, :n] = req.prompt[req.computed : req.computed + n]
-                sample = req.computed + n == s0
+            fl = req.fed_len
+            if req.computed < fl:  # chunked (re)prefill of the fed stream
+                n = min(c, fl - req.computed)
+                stream = (
+                    req.prompt if not req.out else req.fed_tokens()
+                )
+                tokens[slot, :n] = stream[req.computed : req.computed + n]
+                # sample only when completing a FRESH prefill: a replayed
+                # fed stream's outputs are already known (preemption
+                # exactness hinges on not re-sampling them)
+                sample = req.computed + n == fl and not req.out
             else:  # decode: feed the last sampled token
                 n = 1
                 tokens[slot, 0] = req.out[-1]
@@ -377,21 +674,41 @@ class Scheduler:
             positions[slot, :n] = np.arange(
                 req.computed, req.computed + n, dtype=np.int32
             )
-            grown = self.allocator.ensure(req.rid, req.computed + n)
-            self._committed -= len(grown)
-            fresh.extend(grown)
-            if grown:
-                self._table_stale[slot] = True
-            self._cow_for_write(
-                req, req.computed, req.computed + n, cow_pairs, fresh
-            )
+            n_cow0 = len(cow_pairs)
+            try:
+                self._grow_for_write(req, req.computed + n, fresh, cow_pairs)
+            except InjectedAllocFault:
+                # fault-driven preemption: reset the row to padding and
+                # carry on — co-batched rows are unaffected
+                del cow_pairs[n_cow0:]
+                tokens[slot] = 0
+                positions[slot] = -1
+                self._sample_idx[slot] = 0
+                self._sample_mask[slot] = False
+                self.preempt(req, fault=True)
+                self._sync_table_row(slot, None)
+                continue
             self._sync_table_row(slot, req)
             self._sample_idx[slot] = n - 1
             self._sample_mask[slot] = sample
             rows[slot] = req
             n_new[slot] = n
-        assert len(fresh) <= self.scrub_width, (fresh, self.scrub_width)
-        assert len(cow_pairs) <= self.cow_width, (cow_pairs, self.cow_width)
+        if len(fresh) > self.scrub_width:
+            raise SchedulerInvariantError(
+                f"mixed-step scrub overflow at iteration {self.iteration}: "
+                f"{len(fresh)} fresh pages {fresh} exceed scrub_width "
+                f"{self.scrub_width} (rows="
+                f"{[r.rid if r else None for r in rows]}, n_new={n_new})"
+            )
+        if len(cow_pairs) > self.cow_width:
+            raise SchedulerInvariantError(
+                f"mixed-step CoW overflow at iteration {self.iteration}: "
+                f"{len(cow_pairs)} pairs {cow_pairs} exceed cow_width "
+                f"{self.cow_width} (rows="
+                f"{[r.rid if r else None for r in rows]})"
+            )
+        if all(r is None for r in rows):
+            return None  # every row was preempted mid-plan
         self._scrub[:] = NULL_PAGE
         self._scrub[: len(fresh)] = fresh
         self._cow[:] = NULL_PAGE
@@ -403,18 +720,34 @@ class Scheduler:
             self._sample_mask, rows, n_new, self._scrub, self._cow,
         )
 
-    def _plan_decode_run(self, active: List[Request]) -> DecodeRun:
+    def _event_horizon(self) -> Optional[int]:
+        """Iterations until the next schedule-visible event (arrival,
+        deadline, cancel_at) — fused decode runs must not step past it,
+        so run-length choice never changes admission/abort timing vs the
+        one-token-at-a-time schedule."""
+        it = self.iteration
+        deltas = []
+        everyone = (
+            self.pending
+            + self.queue
+            + [r for r in self.slots if r is not None]
+        )
+        for req in self.pending:
+            if req.arrival > it:
+                deltas.append(req.arrival - it)
+        for req in everyone:
+            if req.deadline is not None and req.deadline > it:
+                deltas.append(req.deadline - it)
+            if req.cancel_at is not None and req.cancel_at > it:
+                deltas.append(req.cancel_at - it)
+        return min(deltas) if deltas else None
+
+    def _plan_decode_run(self, active: List[Request]) -> Optional[DecodeRun]:
         b = self.max_batch
         k = min(r.max_new_tokens - len(r.out) for r in active)
-        # never step past a future arrival: admission timing must match
-        # the one-token-at-a-time schedule exactly
-        future = [
-            r.arrival - self.iteration
-            for r in self.queue
-            if r.arrival > self.iteration
-        ]
-        if future:
-            k = min(k, min(future))
+        horizon = self._event_horizon()
+        if horizon is not None:
+            k = min(k, horizon)
         k = int(max(1, min(k, self.decode_block)))
         tokens, positions = self._run_tokens, self._run_positions
         tokens[:] = 0
@@ -428,18 +761,34 @@ class Scheduler:
                 continue
             tokens[slot, 0] = req.out[-1]
             positions[slot] = req.computed
-            grown = self.allocator.ensure(req.rid, req.computed + k)
-            self._committed -= len(grown)
-            fresh.extend(grown)
-            if grown:
-                self._table_stale[slot] = True
-            self._cow_for_write(
-                req, req.computed, req.computed + k, cow_pairs, fresh
-            )
+            n_cow0 = len(cow_pairs)
+            try:
+                self._grow_for_write(req, req.computed + k, fresh, cow_pairs)
+            except InjectedAllocFault:
+                del cow_pairs[n_cow0:]
+                tokens[slot, 0] = 0
+                positions[slot] = -1
+                self.preempt(req, fault=True)
+                self._sync_table_row(slot, None)
+                continue
             self._sync_table_row(slot, req)
             rows[slot] = req
-        assert len(fresh) <= self.run_scrub_width, (fresh, self.run_scrub_width)
-        assert len(cow_pairs) <= self.cow_width, (cow_pairs, self.cow_width)
+        if len(fresh) > self.run_scrub_width:
+            raise SchedulerInvariantError(
+                f"decode-run scrub overflow at iteration {self.iteration}: "
+                f"{len(fresh)} fresh pages {fresh} exceed run_scrub_width "
+                f"{self.run_scrub_width} (n_steps={k}, rows="
+                f"{[r.rid if r else None for r in rows]})"
+            )
+        if len(cow_pairs) > self.cow_width:
+            raise SchedulerInvariantError(
+                f"decode-run CoW overflow at iteration {self.iteration}: "
+                f"{len(cow_pairs)} pairs {cow_pairs} exceed cow_width "
+                f"{self.cow_width} (n_steps={k}, rows="
+                f"{[r.rid if r else None for r in rows]})"
+            )
+        if all(r is None for r in rows):
+            return None  # every row was preempted mid-plan
         self._run_scrub[:] = NULL_PAGE
         self._run_scrub[: len(fresh)] = fresh
         self._run_cow[:] = NULL_PAGE
@@ -471,18 +820,39 @@ class Scheduler:
             self.prefix.register(req.hashes[req.reg_pages], table[req.reg_pages])
             req.reg_pages += 1
 
-    def _finish(self, slot: int, req: Request) -> None:
+    def _finish(self, slot: int, req: Request, reason: str) -> None:
         req.state = FINISHED
         req.slot = None
+        req.finish_reason = reason
+        self.finished_by_reason[reason] = (
+            self.finished_by_reason.get(reason, 0) + 1
+        )
         self.allocator.free(req.rid)
+        self._committed -= req.committed
+        req.committed = 0
         self.slots[slot] = None
         self._table_stale[slot] = True
 
-    def commit(self, plan: StepPlan, sampled: np.ndarray) -> None:
+    def _quarantine(self, slot: int, req: Request) -> None:
+        """The engine's watchdog saw non-finite logits on this row: free
+        and scrub its pages, finish it as ``numerical_error``.  Pages it
+        published to the prefix cache in EARLIER (healthy) commits stay —
+        their content predates the fault."""
+        self.quarantines += 1
+        self._finish(slot, req, FINISH_NUMERICAL)
+
+    def commit(
+        self,
+        plan: StepPlan,
+        sampled: np.ndarray,
+        ok: Optional[np.ndarray] = None,
+    ) -> None:
         """Apply one step's results: advance positions, record sampled
         tokens, publish finished prompt pages, retire finished requests
         (their non-shared pages return to the pool and the row frees for
-        next iteration's admission)."""
+        next iteration's admission).  ``ok`` is the watchdog verdict per
+        row (sampled logits all finite); a False row is quarantined
+        instead of extended — its garbage sample is never recorded."""
         self.iteration += 1
         for slot, req in enumerate(plan.rows):
             if req is None:
@@ -490,20 +860,37 @@ class Scheduler:
             req.computed += plan.n_new[slot]
             self._register_prefix(req)
             if plan.sample_mask[slot]:
+                if ok is not None and not bool(ok[slot]):
+                    self._quarantine(slot, req)
+                    continue
                 req.out.append(int(sampled[slot]))
                 if len(req.out) >= req.max_new_tokens:
-                    self._finish(slot, req)
+                    self._finish(slot, req, FINISH_LENGTH)
 
-    def commit_run(self, run: DecodeRun, sampled: np.ndarray) -> None:
+    def commit_run(
+        self,
+        run: DecodeRun,
+        sampled: np.ndarray,
+        bad_at: Optional[np.ndarray] = None,
+    ) -> None:
         """Apply a fused decode run: every active row advances ``n_steps``
-        positions and gains ``n_steps`` sampled tokens."""
+        positions and gains ``n_steps`` sampled tokens.  ``bad_at`` is
+        the in-loop watchdog verdict: the first loop index whose logits
+        were non-finite for that row (>= n_steps when clean).  A poisoned
+        row keeps only its pre-fault tokens and is quarantined."""
         k = run.n_steps
         self.iteration += k
         for slot, req in enumerate(run.rows):
             if req is None:
                 continue
+            bad = int(bad_at[slot]) if bad_at is not None else k
+            if bad < k:
+                req.computed += bad
+                req.out.extend(int(x) for x in sampled[slot, :bad])
+                self._quarantine(slot, req)
+                continue
             req.computed += k
             req.out.extend(int(x) for x in sampled[slot, :k])
             self._register_prefix(req)
             if len(req.out) >= req.max_new_tokens:
-                self._finish(slot, req)
+                self._finish(slot, req, FINISH_LENGTH)

@@ -1,0 +1,420 @@
+"""Robustness tests: preemption, backpressure, and fault isolation.
+
+The continuous serving loop must survive overload and injected faults
+with *typed*, per-request outcomes — never an engine exception — and the
+degraded paths must be invisible in the bytes of every healthy request:
+
+* preempt-and-recompute emits byte-identical tokens to an uninterrupted
+  run, across GQA/MLA × {native, int8 wire} × {f32, int8 KV};
+* injected allocator failures, a forced fused-kernel failure (one-way
+  gather fallback), free-page scribbles, and NaN-poisoned logits leave
+  every co-batched healthy request byte-identical to a fault-free run;
+* the seeded chaos fuzz (``-m chaos``) drives all of the above at once
+  over a 2x-oversubscribed pool for hundreds of seeds.
+"""
+
+import dataclasses
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve import faults
+from repro.serve.engine import Engine, RequestResult, ServeConfig
+from repro.serve.scheduler import (
+    FINISH_CANCELLED,
+    FINISH_DEADLINE,
+    FINISH_LENGTH,
+    FINISH_NUMERICAL,
+    FINISH_REJECTED_CAPACITY,
+    FINISH_REJECTED_TOO_LARGE,
+    SchedulerInvariantError,
+)
+
+
+def small_cfg(arch="granite_3_8b", **kw):
+    cfg = configs.get_config(arch, smoke=True)
+    over = dict(vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32")
+    if arch == "qwen2_vl_72b":
+        over["d_model"] = 128
+    over.update(kw)
+    return dataclasses.replace(cfg, **over)
+
+
+def _wire_kwargs(wire):
+    return dict(pack_weights=True, wire_dtype="int8") if wire == "int8" else {}
+
+
+def _mixed_prompts(vocab, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, (s,)).astype(np.int32) for s in lengths]
+
+
+def _stepped_reference(params, cfg, prompts, n_tokens, **wkw):
+    """Per-request solo stepped outputs — the byte-exactness oracle."""
+    ref = Engine(params, cfg, ServeConfig(
+        max_seq=64, prefill_mode="stepped", **wkw
+    ))
+    n_list = (
+        [n_tokens] * len(prompts) if isinstance(n_tokens, int) else n_tokens
+    )
+    return [ref.generate(p[None], n)[0] for p, n in zip(prompts, n_list)]
+
+
+# ------------------------------------------------------------- typed API
+
+
+def test_scheduler_invariant_error_is_typed():
+    """Invariant violations raise a dedicated exception type (not a bare
+    ``assert`` that ``python -O`` would strip)."""
+    assert issubclass(SchedulerInvariantError, RuntimeError)
+    err = SchedulerInvariantError("iteration 3: scrub overflow")
+    assert "iteration 3" in str(err)
+
+
+def test_serve_config_robustness_validation():
+    for bad in (
+        dict(backpressure="drop"),
+        dict(max_queue=0),
+        dict(preempt_after=0),
+    ):
+        with pytest.raises(ValueError):
+            ServeConfig(prefill_mode="continuous", **bad)
+
+
+def test_serve_requests_typed_outcomes():
+    """Oversized / deadline / cancelled requests come back as typed
+    RequestResults; completed ones match generate_requests exactly."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12))
+    big = np.zeros(40, np.int32)
+    skw = dict(
+        prefill_mode="continuous", max_seq=32, page_size=8,
+        max_batch=2, prefill_chunk=4,
+    )
+    eng = Engine(params, cfg, ServeConfig(**skw))
+    res = eng.serve_requests(
+        [prompts[0], big, prompts[1], prompts[2]], 6,
+        deadlines=[None, None, 4, None],
+        cancel_at=[None, None, None, 2],
+    )
+    assert [r.finish_reason for r in res] == [
+        FINISH_LENGTH, FINISH_REJECTED_TOO_LARGE,
+        FINISH_DEADLINE, FINISH_CANCELLED,
+    ]
+    assert res[0].ok and not any(r.ok for r in res[1:])
+    assert all(isinstance(r, RequestResult) for r in res)
+    # degraded outcomes still return prompt ‖ partial output
+    assert res[1].n_generated == 0
+    np.testing.assert_array_equal(res[1].tokens, big)
+    for r, p in ((res[2], prompts[1]), (res[3], prompts[2])):
+        np.testing.assert_array_equal(r.tokens[: len(p)], p)
+        assert r.n_generated == len(r.tokens) - len(p) < 6
+    # the completed request is byte-identical to the batched API
+    ref = _stepped_reference(params, cfg, prompts[:1], 6)
+    np.testing.assert_array_equal(res[0].tokens, ref[0])
+
+
+def test_generate_requests_validates_full_list_up_front():
+    """A mid-list oversized request raises BEFORE any scheduling: earlier
+    requests are not stranded half-served and the engine stays clean."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5))
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32, page_size=8, max_batch=2,
+    ))
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.generate_requests(
+            [prompts[0], np.zeros(40, np.int32), prompts[1]], 4
+        )
+    assert eng._cont is None  # nothing touched the paged pool
+    assert eng.health().get("preemptions", 0) == 0
+    # the engine is fully usable afterwards
+    out = eng.generate_requests(prompts, 4)
+    ref = _stepped_reference(params, cfg, prompts, 4)
+    for got, want in zip(out, ref):
+        np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------- preemption (byte-exactness)
+
+
+def _overload_serve(params, cfg, prompts, n_tokens, **skw):
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", prefill_chunk=4, **skw
+    ))
+    res = eng.serve_requests(prompts, n_tokens)
+    return eng, res
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+@pytest.mark.parametrize("wire", ["native", "int8"])
+@pytest.mark.parametrize("kv", ["native", "int8"])
+def test_preempt_and_recompute_byte_identical(arch, wire, kv):
+    """Aging preemption under a constrained page pool: the preempted
+    request re-queues, replays its fed stream, and finishes with tokens
+    byte-identical to its uninterrupted solo run — across GQA/MLA, the
+    int8 weight wire, and the int8 KV cache."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    wkw = _wire_kwargs(wire)
+    if kv == "int8":
+        wkw["kv_dtype"] = "int8"
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12, 7), seed=5)
+    # pool sized so three requests can never coexist: the waiter ages
+    # out and preempts the youngest runner
+    eng, res = _overload_serve(
+        params, cfg, prompts, 10,
+        max_seq=24, page_size=4, max_batch=3, max_pages=13,
+        preempt_after=2, **wkw,
+    )
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    health = eng.health()
+    assert health["preemptions"] > 0, "pool pressure never forced a preempt"
+    assert sum(r.preemptions for r in res) == health["preemptions"]
+    ref = _stepped_reference(params, cfg, prompts, 10, **wkw)
+    for i, (r, want) in enumerate(zip(res, ref)):
+        np.testing.assert_array_equal(
+            r.tokens, want,
+            err_msg=f"request {i} diverged after preempt-and-recompute",
+        )
+
+
+def test_admission_at_zero_page_headroom():
+    """With the pool sized so one admitted request leaves exactly zero
+    free-page headroom (n_free - committed == 0), the next request must
+    wait for release — not over-admit — and both finish byte-exact."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (8, 8), seed=7)
+    # lifetime need: pages_for(8 + 6 - 1, 4) = 4 pages; pool = 4 + null
+    eng, res = _overload_serve(
+        params, cfg, prompts, 6,
+        max_seq=16, page_size=4, max_batch=2, max_pages=5,
+        prefix_cache=False,
+    )
+    assert [r.finish_reason for r in res] == [FINISH_LENGTH] * 2
+    ref = _stepped_reference(params, cfg, prompts, 6)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+# ----------------------------------------------------------- backpressure
+
+
+def test_backpressure_reject_bounds_the_queue():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (8,) * 5, seed=11)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32, page_size=8,
+        max_batch=1, prefill_chunk=4, max_queue=1, backpressure="reject",
+    ))
+    res = eng.serve_requests(prompts, 4)
+    reasons = [r.finish_reason for r in res]
+    assert FINISH_REJECTED_CAPACITY in reasons
+    assert reasons.count(FINISH_LENGTH) >= 1
+    assert eng.health()["queue_high_water"] <= 1
+    ref = _stepped_reference(params, cfg, prompts, 4)
+    for r, want in zip(res, ref):
+        if r.finish_reason == FINISH_LENGTH:
+            np.testing.assert_array_equal(r.tokens, want)
+        else:
+            assert r.n_generated == 0
+
+
+def test_backpressure_block_completes_everything():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (8,) * 5, seed=11)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=32, page_size=8,
+        max_batch=1, prefill_chunk=4, max_queue=1, backpressure="block",
+    ))
+    res = eng.serve_requests(prompts, 4)
+    assert [r.finish_reason for r in res] == [FINISH_LENGTH] * 5
+    assert eng.health()["queue_high_water"] <= 1
+    ref = _stepped_reference(params, cfg, prompts, 4)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+def test_deadlines_invariant_to_decode_block():
+    """Deadline/cancel expiry counts scheduler iterations, and the fused
+    decode-run event horizon stops at the earliest one — so decode_block
+    1 and 16 produce identical typed outcomes and identical bytes."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    outs = []
+    for block in (1, 16):
+        eng = Engine(params, cfg, ServeConfig(
+            prefill_mode="continuous", max_seq=48, page_size=8,
+            max_batch=3, prefill_chunk=4, decode_block=block,
+        ))
+        outs.append(eng.serve_requests(
+            prompts, 12, deadlines=[None, 9, None], cancel_at=[None, None, 7],
+        ))
+    for a, b in zip(*outs):
+        assert a.finish_reason == b.finish_reason
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert [r.finish_reason for r in outs[0]] == [
+        FINISH_LENGTH, FINISH_DEADLINE, FINISH_CANCELLED,
+    ]
+
+
+# -------------------------------------------------------- fault injection
+
+
+def test_alloc_faults_preempt_and_recompute_exactly():
+    """Injected allocator failures mid-growth preempt only the affected
+    row; every request still completes with byte-identical tokens."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=48, page_size=4,
+        max_batch=3, prefill_chunk=4,
+    ))
+    eng.set_faults(faults.FaultConfig(seed=7, alloc_fail_p=0.2))
+    res = eng.serve_requests(prompts, 8)
+    health = eng.health()
+    assert health["injected_alloc_faults"] > 0, "fault never fired"
+    assert health["preemptions_fault"] == health["injected_alloc_faults"]
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+def test_nan_watchdog_quarantines_only_poisoned_row():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=48, page_size=8,
+        max_batch=3, prefill_chunk=4,
+    ))
+    victim_rid = eng._rid + 2  # second request of the upcoming call
+    eng.set_faults(faults.FaultConfig(seed=0, nan_rids=(victim_rid,)))
+    res = eng.serve_requests(prompts, 8)
+    assert res[1].finish_reason == FINISH_NUMERICAL
+    assert res[0].finish_reason == res[2].finish_reason == FINISH_LENGTH
+    assert eng.health()["quarantines"] == 1
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for i in (0, 2):
+        np.testing.assert_array_equal(
+            res[i].tokens, ref[i],
+            err_msg=f"healthy request {i} disturbed by quarantine",
+        )
+
+
+def test_fused_failure_falls_back_to_gather(caplog):
+    """A forced fused-kernel failure triggers the logged one-way gather
+    fallback; tokens stay byte-identical (fused == gather exactly)."""
+    cfg = small_cfg(sparsity=dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True).sparsity,
+        paged_attn="fused",
+    ))
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5), seed=3)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=48, page_size=8,
+        max_batch=2, prefill_chunk=4,
+    ))
+    eng.set_faults(faults.FaultConfig(seed=0, fail_fused=True))
+    with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+        res = eng.serve_requests(prompts, 8)
+    assert eng.fallbacks == 1
+    assert eng.cfg.sparsity.paged_attn == "gather"  # one-way switch
+    assert any("falling back" in r.getMessage().lower() for r in caplog.records)
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+def test_scrub_scribbles_are_invisible():
+    """Scribbling garbage into *free* pages every step must not perturb
+    any output: scrub-on-hand-out rewrites every page before use."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", max_seq=48, page_size=4,
+        max_batch=2, prefill_chunk=4,
+    ))
+    eng.set_faults(faults.FaultConfig(seed=1, scrub_corrupt_p=1.0))
+    res = eng.serve_requests(prompts, 8)
+    assert eng.health()["injected_scribbles"] > 0
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+# ------------------------------------------------------------- chaos fuzz
+
+
+@pytest.mark.chaos
+def test_chaos_fuzz_zero_exceptions_healthy_rows_exact():
+    """The acceptance fuzz: >= 200 seeds of combined faults — allocator
+    failures (p=0.05), one forced fused-kernel failure, one NaN-poisoned
+    request, free-page scribbles — over a 2x-oversubscribed pool.  Every
+    seed must finish with zero engine exceptions, every request typed,
+    and every *healthy* request byte-identical to the fault-free run."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    lengths = (9, 5, 12, 7, 10, 6)
+    prompts = _mixed_prompts(cfg.vocab, lengths, seed=13)
+    n_tok = 8
+    skw = dict(
+        prefill_mode="continuous", max_seq=48, page_size=4,
+        # 2x oversubscription: lifetime need is ~4 pages/request x 6
+        # requests = 25 incl. null; give the pool half that
+        max_batch=3, max_pages=13, prefill_chunk=4, preempt_after=3,
+    )
+    ref = _stepped_reference(params, cfg, prompts, n_tok)
+    eng = Engine(params, cfg, ServeConfig(**skw))  # reused across seeds
+    total_faults = 0
+    for seed in range(200):
+        victim = eng._rid + 1 + (seed % len(prompts))
+        eng.set_faults(faults.FaultConfig(
+            seed=seed, alloc_fail_p=0.05, fail_fused=False,
+            nan_rids=(victim,), scrub_corrupt_p=0.1,
+        ))
+        res = eng.serve_requests(prompts, n_tok)  # must never raise
+        for i, r in enumerate(res):
+            assert r.finish_reason in (FINISH_LENGTH, FINISH_NUMERICAL), (
+                f"seed {seed} request {i}: {r.finish_reason}"
+            )
+            if r.finish_reason == FINISH_LENGTH:
+                np.testing.assert_array_equal(
+                    r.tokens, ref[i],
+                    err_msg=f"seed {seed}: healthy request {i} corrupted",
+                )
+        h = eng.health()
+        total_faults = (
+            h["injected_alloc_faults"] + h["injected_nan_poisons"]
+            + h["injected_scribbles"]
+        )
+    assert total_faults > 0, "chaos fuzz never injected anything"
+    # the forced fused failure rides on a fused-path engine once
+    fcfg = small_cfg(sparsity=dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True).sparsity,
+        paged_attn="fused",
+    ))
+    fparams, _ = lm.init_lm(fcfg, jax.random.PRNGKey(0))
+    feng = Engine(fparams, fcfg, ServeConfig(**skw))
+    feng.set_faults(faults.FaultConfig(seed=0, fail_fused=True))
+    fres = feng.serve_requests(prompts, n_tok)
+    assert feng.fallbacks == 1
+    fref = _stepped_reference(fparams, fcfg, prompts, n_tok)
+    for r, want in zip(fres, fref):
+        assert r.finish_reason == FINISH_LENGTH
+        np.testing.assert_array_equal(r.tokens, want)

@@ -195,17 +195,24 @@ def _run_schedule(n_pages, page_size, ops):
     after every op.
 
     ops: list of (kind, arg) with kind in {"new", "append", "free",
-    "share", "hold", "unhold"}; ``arg`` selects targets (modulo counts).
+    "share", "hold", "unhold", "preempt", "readopt"}; ``arg`` selects
+    targets (modulo counts).
     ``share`` forks a new request off an existing one's full-page prefix
     (adoption); an odd ``arg`` truncates the fork's logical stream by
     one token — mimicking the full-prefix-hit recompute — so its next
     append lands inside a shared page and must copy-on-write.
+    ``preempt`` models scheduler preempt-and-recompute: the victim's
+    full pages are held (prefix-cache registration), the request is
+    freed, and a later ``readopt`` re-admits a request that adopts those
+    held pages and replays — the exact release/readopt interleaving the
+    serving loop performs under pool pressure (serve/scheduler.py).
     """
     _PHYS.clear()
     a = PageAllocator(n_pages, page_size)
     streams = {}  # rid -> list of written values (the logical stream)
     holds = Counter()  # page -> external (prefix-cache-style) holds
     model_dirty = set()  # pages freed (refcount 0) and not yet scrubbed
+    cached = []  # (pages, values) published by "preempt", for "readopt"
     next_rid, next_val = 0, 0
     for kind, arg in ops:
         if kind == "new":
@@ -277,12 +284,45 @@ def _run_schedule(n_pages, page_size, ops):
             holds[p] -= 1
             if before == 1:
                 model_dirty.add(p)
+        elif kind == "preempt" and streams:
+            # scheduler preemption: publish full pages (cache holds) so
+            # readmission can re-adopt, then release everything
+            rid = sorted(streams)[arg % len(streams)]
+            stream = streams[rid]
+            n_full = len(stream) // page_size
+            full_pages = list(a.page_table(rid)[:n_full])
+            for p in full_pages:
+                a.hold(p)
+                holds[p] += 1
+            if full_pages:
+                cached.append((full_pages, list(stream[: n_full * page_size])))
+            before = a.page_table(rid)
+            a.free(rid)
+            del streams[rid]
+            model_dirty.update(p for p in before if a.refcount(p) == 0)
+        elif kind == "readopt" and cached:
+            # readmission after preemption: adopt the still-held prefix
+            # pages; odd arg replays one token short (the fed-stream
+            # truncation), so the next append must copy-on-write
+            pages, values = cached[arg % len(cached)]
+            if len(values) - (arg % 2) < 1:
+                continue
+            if any(holds[p] < 1 for p in pages):
+                # an "unhold" evicted part of this cached prefix: without
+                # the hold a sole-owner page could be rewritten in place,
+                # so the entry is no longer safely adoptable (the real
+                # PrefixCache deletes the entry at eviction time)
+                continue
+            a.alloc(next_rid)
+            a.adopt(next_rid, pages)
+            streams[next_rid] = list(values[: len(values) - (arg % 2)])
+            next_rid += 1
         _check_invariants(a, streams, holds)
         assert a.dirty_pages() == model_dirty, "dirty-set drift"
 
 
 _OP_KINDS = ["new", "append", "append", "append", "free",
-             "share", "share", "hold", "unhold"]
+             "share", "share", "hold", "unhold", "preempt", "readopt"]
 
 
 def _random_ops(rng, n_ops):
@@ -363,6 +403,25 @@ def test_prefix_cache_match_register_evict():
     # remaining entry is the most recently used chain head... the two
     # oldest (LRU) entries were dropped and their pages are free again
     assert a.n_free == 6
+
+
+def test_prefix_cache_evict_all_shared_reclaims_nothing():
+    # every cached page is also referenced by a live request (refcount
+    # 2): eviction must refuse to unhold any of them — shared pages cost
+    # no capacity and yanking one would corrupt the running request
+    a = PageAllocator(5, 2)  # 4 data pages + the null page
+    pc = PrefixCache(a)
+    prompt = np.arange(8, dtype=np.int32)
+    a.alloc("r0")
+    pages = a.ensure("r0", 8)
+    for h, p in zip(page_hashes(prompt, 2), pages):
+        pc.register(h, p)
+    assert all(a.refcount(p) == 2 for p in pages)
+    assert pc.evict(4) == 0
+    assert len(pc) == 4 and a.n_free == 0
+    # once the request releases its references the same call succeeds
+    a.free("r0")
+    assert pc.evict(4) == 4 and len(pc) == 0 and a.n_free == 4
 
 
 # --------------------------------------------- paged read/write vs ring
