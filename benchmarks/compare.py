@@ -50,6 +50,12 @@ TRACKED_RATIOS = (
     # serving throughput: continuous batching vs one-shot batched prefill
     # (benchmarks/serve_bench.py)
     "continuous_vs_oneshot_throughput",
+    # seeded sampled decode vs greedy on the same continuous workload:
+    # the sampler is fused into the same 2-trace decode loop, so this
+    # should sit near 1.0 — a collapse means sampling broke the fused
+    # path (e.g. fell back to per-token dispatch).  Timing-derived, so
+    # it gets the same loose tolerance as continuous_vs_oneshot.
+    "sampled_vs_greedy_throughput",
     # robustness: completed / submitted on the 2x-oversubscribed
     # overload workload — an exact property of preemption + typed
     # outcomes (must stay 1.0; serve_bench.bench_overload)
@@ -61,7 +67,10 @@ TRACKED_RATIOS = (
 # RATIO_TOLS holds per-key overrides for tracked ratios derived from
 # wall timings instead of byte layouts.
 RATIO_TOL = 0.01
-RATIO_TOLS = {"continuous_vs_oneshot_throughput": 0.15}
+RATIO_TOLS = {
+    "continuous_vs_oneshot_throughput": 0.15,
+    "sampled_vs_greedy_throughput": 0.15,
+}
 
 
 def _rows(record, bench):

@@ -28,6 +28,17 @@ byte shrink vs f32 KV storage (~4x; int8 values + one f32 scale per
 token row — gated like the other wire-format ratios), and the
 ``serve_decode_step_{f32,int8}_kv`` µs rows time one warm jitted decode
 step under each KV wire (the dequant-at-read overhead the ratio buys).
+
+Sampled-decode row: ``serve_continuous_sampled`` runs the same workload
+with ``temperature=0.7`` — every in-loop sample routes through the
+seeded categorical sampler (core/sampling.py) instead of the argmax
+fast path — and ``sampled_vs_greedy_throughput`` (timing-derived, loose
+tolerance in compare.py) tracks its cost.  ``python -m
+benchmarks.serve_bench --check-sampling`` is the live CI smoke: fused
+sampled bytes == stepped sampled bytes, sampled output actually
+diverges from greedy, greedy bytes unchanged by the sampler, stop
+tokens fire, and the 2-trace compile budget holds with sampling fused
+in-loop.
 """
 
 from __future__ import annotations
@@ -212,16 +223,25 @@ def bench_serve(smoke: bool = False):
     # paged_attn_window_bytes_ratio rows in kernel_paged_attn carry the
     # HBM-traffic claim; docs/perf.md)
     cont_fused = Engine(params, cfg, ServeConfig(paged_attn="fused", **ckw))
+    # seeded sampled decode through the same fused loop (temperature>0
+    # routes every in-loop sample through the categorical sampler);
+    # sampled_vs_greedy_throughput tracks what sampling costs the loop
+    cont_sampled = Engine(params, cfg, ServeConfig(
+        temperature=0.7, seed=11, **ckw
+    ))
     oneshot.generate(prompts, n_new)  # warmup/compile
     # cold wall: first continuous call pays jit tracing + both compiles
     # (mixed step + fused decode loop); warm passes time the steady state
     s_cold = _time_once(lambda: cont.generate(prompts, n_new), passes=1)
     cont_fused.generate(prompts, n_new)
+    cont_sampled.generate(prompts, n_new)
     s_one = _time_once(lambda: oneshot.generate(prompts, n_new), passes)
     s_cont = _time_once(lambda: cont.generate(prompts, n_new), passes)
     s_fused = _time_once(lambda: cont_fused.generate(prompts, n_new), passes)
+    s_samp = _time_once(lambda: cont_sampled.generate(prompts, n_new), passes)
     tok = b * n_new
     tps_one, tps_cont = tok / s_one, tok / s_cont
+    tps_samp = tok / s_samp
     kv_rows, _ = bench_kv_cache(cfg, params, passes)
     rows = [
         {"impl": "serve_oneshot_batched", "us": round(s_one * 1e6, 1),
@@ -239,9 +259,14 @@ def bench_serve(smoke: bool = False):
         {"impl": "serve_continuous_paged_attn_fused",
          "us": round(s_fused * 1e6, 1),
          "tokens_per_s": round(tok / s_fused, 1)},
+        {"impl": "serve_continuous_sampled",
+         "us": round(s_samp * 1e6, 1),
+         "tokens_per_s": round(tps_samp, 1),
+         "paged_compiles": cont_sampled.paged_compiles},
         # timing-derived; gated with a loose per-key tolerance in
         # benchmarks/compare.py (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
+        {"sampled_vs_greedy_throughput": round(tps_samp / tps_cont, 3)},
         *bench_prefix_cache(params, cfg, b),
         *bench_overload(params, cfg, passes),
         *kv_rows,
@@ -384,6 +409,81 @@ def check_chaos(n_seeds: int = 12) -> int:
     return 1 if failures else 0
 
 
+def check_sampling() -> int:
+    """CI smoke gate for seeded sampling: one live mini-workload asserts
+    the reproducibility contract end to end (docs/serving.md "Sampling")
+    — fused-loop sampled tokens byte-identical to the stepped sampler
+    under the same seed, sampled output diverging from greedy, greedy
+    output identical with and without the sampler in the loop, stop
+    tokens finishing as ``"stop"``, and ``paged_compiles == 2`` with
+    sampling fused in-loop.  Returns a process exit code."""
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True),
+        vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32",
+    )
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32)
+        for s in (9, 5, 12)
+    ]
+    n_tok = 8
+    ckw = dict(
+        prefill_mode="continuous", max_seq=32, page_size=8,
+        max_batch=2, prefill_chunk=4, prefix_cache=False,
+    )
+    skw = dict(temperature=0.7, seed=11)
+    failures = []
+    sampled_eng = Engine(params, cfg, ServeConfig(**ckw, **skw))
+    sampled = sampled_eng.generate_requests(prompts, n_tok)
+    stepped_eng = Engine(params, cfg, ServeConfig(
+        max_seq=32, prefill_mode="stepped", **skw
+    ))
+    stepped = [stepped_eng.generate(p[None], n_tok)[0] for p in prompts]
+    for i, (a, b_) in enumerate(zip(sampled, stepped)):
+        if not np.array_equal(a, b_):
+            failures.append(f"request {i}: fused sampled != stepped sampled")
+    if sampled_eng.decode_run_calls == 0:
+        failures.append("sampled workload never used the fused decode loop")
+    if sampled_eng.paged_compiles != 2:
+        failures.append(
+            f"paged_compiles != 2 with sampling: {sampled_eng.paged_compiles}"
+        )
+    greedy_eng = Engine(params, cfg, ServeConfig(**ckw))
+    greedy = greedy_eng.generate_requests(prompts, n_tok)
+    greedy_stepped = Engine(params, cfg, ServeConfig(
+        max_seq=32, prefill_mode="stepped"
+    ))
+    for i, (g, p) in enumerate(zip(greedy, prompts)):
+        if not np.array_equal(g, greedy_stepped.generate(p[None], n_tok)[0]):
+            failures.append(f"request {i}: greedy bytes changed")
+    if all(np.array_equal(a, g) for a, g in zip(sampled, greedy)):
+        failures.append("temperature=0.7 never diverged from greedy")
+    # stop tokens: stop on the 3rd greedy continuation token
+    stop = int(greedy[0][len(prompts[0]) + 2])
+    res = greedy_eng.serve_requests(prompts[:1], n_tok, stop_tokens=[stop])
+    if res[0].finish_reason != "stop":
+        failures.append(
+            f"stop token did not fire: {res[0].finish_reason!r}"
+        )
+    elif int(res[0].tokens[-1]) != stop:
+        failures.append("stop token not recorded as the final output token")
+    for line in failures:
+        print(f"check-sampling FAIL: {line}")
+    if not failures:
+        print(
+            "check-sampling ok: fused==stepped over "
+            f"{len(prompts)} sampled requests, "
+            f"paged_compiles={sampled_eng.paged_compiles}, "
+            f"stop fired at {res[0].n_generated} tokens"
+        )
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
     import sys
 
@@ -392,5 +492,7 @@ if __name__ == "__main__":
         sys.exit(check_prefix(*args[:1]))
     if "--check-chaos" in sys.argv:
         sys.exit(check_chaos())
+    if "--check-sampling" in sys.argv:
+        sys.exit(check_sampling())
     for row in bench_serve(smoke="--smoke" in sys.argv)[0]:
         print(row)

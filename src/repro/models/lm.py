@@ -397,43 +397,53 @@ def paged_step(params, cache, tokens, positions, page_tables, cfg,
 
 def paged_decode_loop(params, cache, tokens, positions, page_tables,
                       n_steps, cfg, *, max_steps,
-                      scrub_pages=None, cow_pages=None):
-    """Fused multi-token greedy decode over the paged KV cache.
+                      scrub_pages=None, cow_pages=None, sampling=None):
+    """Fused multi-token decode over the paged KV cache.
 
     Runs up to ``max_steps`` (static buffer width) decode iterations of
     :func:`paged_step` *inside one jitted dispatch* — an on-device
     ``fori_loop`` whose trip count ``n_steps`` is a **traced** scalar, so
     one compiled trace serves every run length.  Sampling is fused into
-    the loop body (greedy argmax over the unpadded vocab, exactly the
-    engine's ``_sample_at`` at chunk index 0), and each sampled token is
-    fed back as the next iteration's input.  This is what makes
-    continuous batching fast: a decode-only batch pays ONE Python→XLA
-    dispatch per run instead of one per token (serve/scheduler.py plans
-    the runs, ``benchmarks/serve_bench.py`` measures the win).
+    the loop body (the shared seeded sampler in ``core/sampling.py`` over
+    the unpadded vocab — plain greedy argmax when ``sampling`` is None or
+    every temperature is 0, exactly the engine's ``_sample_at`` at chunk
+    index 0), and each sampled token is fed back as the next iteration's
+    input.  This is what makes continuous batching fast: a decode-only
+    batch pays ONE Python→XLA dispatch per run instead of one per token
+    (serve/scheduler.py plans the runs, ``benchmarks/serve_bench.py``
+    measures the win).
 
     ``tokens [B, 1]`` holds each row's last sampled token; ``positions
     [B]`` its first write position (-1 marks an idle row: it keeps
     writing to the null page at position -1 and its outputs are garbage
-    the scheduler never reads).  Scrub/CoW maintenance covers the WHOLE
-    run (the scheduler pre-allocates every page the run will touch), so
-    it is applied once up front, not per iteration.
+    the scheduler never reads).  ``sampling`` is an optional
+    ``(temps [B] f32, top_ks [B] i32, top_ps [B] f32, seeds [B] u32)``
+    tuple of per-row sampling params; PRNG keys are derived from
+    ``(seed, fed-stream position)`` — the loop's ``pos`` carry — so
+    sampled tokens are independent of batch slot, run length, and
+    scheduler iteration (core/sampling.py).  Scrub/CoW maintenance
+    covers the WHOLE run (the scheduler pre-allocates every page the run
+    will touch), so it is applied once up front, not per iteration.
 
     Returns (sampled [B, max_steps] int32, bad_at [B] int32, new_cache);
     sampled entries past ``n_steps`` are zeros.  ``bad_at`` is the in-loop
-    numerical watchdog: per row, the FIRST loop index whose sampled
-    logits contained a non-finite value (``max_steps`` when the whole
-    run was clean) — the scheduler quarantines poisoned rows and keeps
-    only their pre-fault tokens (serve/scheduler.py ``commit_run``).
+    numerical watchdog: per row, the FIRST loop index whose RAW
+    (pre-sampling) logits contained a non-finite value (``max_steps``
+    when the whole run was clean) — the scheduler quarantines poisoned
+    rows and keeps only their pre-fault tokens (serve/scheduler.py
+    ``commit_run``).
     """
     if cfg.family in ("ssm", "hybrid"):
         raise ValueError(
             f"paged_decode_loop unsupported for recurrent family "
             f"{cfg.family!r}: only attention state pages"
         )
+    from repro.core import sampling as sampling_mod
+
     kv_planes, pos_tbl = _prepare_pages(cache, scrub_pages, cow_pages)
     cache = {**kv_planes, "pos": pos_tbl}
     b = tokens.shape[0]
-    v = cfg.vocab  # slice off vocab padding before argmax
+    v = cfg.vocab  # slice off vocab padding before sampling
 
     def body(i, carry):
         cache, toks, pos, out, bad_at = carry
@@ -441,7 +451,15 @@ def paged_decode_loop(params, cache, tokens, positions, page_tables,
             params, cache, toks, pos[:, None], page_tables, cfg
         )
         row = logits[:, 0, :v]
-        nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        if sampling is None:
+            nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        else:
+            temps, top_ks, top_ps, seeds = sampling
+            # keyed on the pre-increment pos carry: the fed-stream
+            # position of the token whose logits `row` holds
+            nxt = sampling_mod.sample_tokens(
+                row, temps, top_ks, top_ps, seeds, pos
+            )
         out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
         # Idle rows (pos < 0) must keep feeding the SAME (token 0, -1)
         # padding the host-driven mixed step feeds, not their own garbage

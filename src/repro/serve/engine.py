@@ -1,14 +1,20 @@
-"""Batched serving engine: prefill + greedy/temperature decode over the
-model zoo, with DBB-packed serving weights as an option (the paper's
-technique applied to inference bandwidth).
+"""Batched serving engine: prefill + seeded sampled decode (greedy when
+``temperature=0``) over the model zoo, with DBB-packed serving weights
+as an option (the paper's technique applied to inference bandwidth).
 
 Prefill is **batched**: the whole prompt goes through one jitted
 chunked-prefill call (``lm.prefill`` — attention is query-chunked
 internally, and the layer stack runs ONCE: each attention layer fills its
 own KV ring in the same trace, no logits-then-recompute double pass), so
 a prompt of ``S0`` tokens costs O(1) Python→XLA dispatches instead of the
-seed's ``S0`` sequential decode steps.  Sampling (vocab slice + argmax)
-is jitted too, so the decode loop does exactly one dispatch per token.
+seed's ``S0`` sequential decode steps.  Sampling (vocab slice + the
+shared seeded sampler in ``core/sampling.py`` — temperature / top-k /
+top-p with per-``(seed, position)`` PRNG keys, plain argmax at
+``temperature=0``) is jitted too, so the decode loop does exactly one
+dispatch per token.  Every path — one-shot batched, stepped, continuous
+mixed step, and the fused decode loop — runs the SAME sampler, so
+sampled output is byte-identical across them under fixed seeds
+(docs/serving.md "Sampling").
 
 ``ServeConfig(pack_weights=True, wire_dtype="int8")`` serves the paper's
 actual INT8 datapath: weights quantize to int8 wire at engine build
@@ -42,11 +48,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dbb
+from repro.core.sampling import (
+    TOP_K_DISABLED,
+    SamplingParams,
+    sample_tokens,
+    validate_sampling,
+)
 from repro.models import common, encdec, lm
 from repro.serve import faults, paged_cache
 from repro.serve.scheduler import (
     FINISH_LENGTH,
     FINISH_REJECTED_TOO_LARGE,
+    FINISH_STOP,
     DecodeRun,
     Request,
     Scheduler,
@@ -79,6 +92,13 @@ class ServeConfig:
       with in-flight decodes, per-request page tables, iteration-level
       admission.  Supports staggered arrivals and mixed prompt lengths
       via :meth:`Engine.generate_requests`; attention families only.
+
+    ``temperature``/``top_k``/``top_p``/``seed`` are the engine-wide
+    sampling defaults (``temperature=0`` = exact greedy argmax) applied
+    by every path; continuous-mode requests can override them per
+    request via ``SamplingParams`` (docs/serving.md "Sampling" — keys
+    derive from ``(seed, fed-stream position)``, so sampled output is
+    reproducible and batch/schedule-invariant).
 
     ``page_size``/``max_pages``/``max_batch``/``prefill_chunk`` shape the
     paged cache and scheduler (continuous mode only).  ``max_pages``
@@ -126,7 +146,11 @@ class ServeConfig:
     """
 
     max_seq: int = 512
-    temperature: float = 0.0  # 0 = greedy
+    # --- default sampling (per-request overrides: SamplingParams) ---
+    temperature: float = 0.0  # 0 = greedy; > 0 = seeded categorical
+    top_k: Optional[int] = None  # keep k highest-prob tokens (None = all)
+    top_p: float = 1.0  # nucleus mass cutoff (1.0 = disabled)
+    seed: int = 0  # base PRNG seed (keys fold in the fed-stream position)
     pack_weights: bool = False  # DBB wire-format weights (W-DBB serving)
     wire_dtype: str = "native"  # native | int8 (paper's int8 datapath)
     kv_dtype: str = "native"  # native | int8 (KV cache storage)
@@ -145,6 +169,10 @@ class ServeConfig:
     preempt_after: Optional[int] = None  # aging preemption threshold
 
     def __post_init__(self):
+        validate_sampling(
+            self.temperature, self.top_k, self.top_p, self.seed,
+            where="ServeConfig",
+        )
         if self.backpressure not in ("reject", "block"):
             raise ValueError(
                 f"unknown backpressure {self.backpressure!r}; reject|block"
@@ -190,6 +218,16 @@ class ServeConfig:
                 )
 
     @property
+    def sampling_params(self) -> SamplingParams:
+        """The config-level sampling defaults as per-request params
+        (``generate`` and any request without an explicit override use
+        these)."""
+        return SamplingParams(
+            temperature=self.temperature, top_k=self.top_k,
+            top_p=self.top_p, seed=self.seed,
+        )
+
+    @property
     def pages_per_request(self) -> int:
         return paged_cache.pages_for(self.max_seq, self.page_size)
 
@@ -204,12 +242,14 @@ class ServeConfig:
 class RequestResult:
     """Typed per-request outcome of :meth:`Engine.serve_requests`.
 
-    ``finish_reason`` is always set: ``"length"`` (completed), or one of
-    the degraded outcomes — ``"rejected_too_large"``,
-    ``"rejected_capacity"``, ``"deadline_exceeded"``, ``"cancelled"``,
-    ``"numerical_error"`` (quarantined).  ``tokens`` is ``prompt ‖
-    generated`` (the prompt alone when nothing was generated), so
-    callers never special-case failures to read output.
+    ``finish_reason`` is always set: ``"length"`` (completed),
+    ``"stop"`` (sampled one of its ``stop_tokens`` — recorded as the
+    final output token), or one of the degraded outcomes —
+    ``"rejected_too_large"``, ``"rejected_capacity"``,
+    ``"deadline_exceeded"``, ``"cancelled"``, ``"numerical_error"``
+    (quarantined).  ``tokens`` is ``prompt ‖ generated`` (the prompt
+    alone when nothing was generated), so callers never special-case
+    failures to read output.
     """
 
     rid: int
@@ -220,7 +260,7 @@ class RequestResult:
 
     @property
     def ok(self) -> bool:
-        return self.finish_reason == FINISH_LENGTH
+        return self.finish_reason in (FINISH_LENGTH, FINISH_STOP)
 
 
 def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
@@ -252,7 +292,9 @@ def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
 
 
 class Engine:
-    """Greedy decoding engine for a batch of prompts."""
+    """Decoding engine for a batch of prompts: greedy by default
+    (``temperature=0``), seeded temperature/top-k/top-p sampling when
+    configured (core/sampling.py)."""
 
     def __init__(self, params, cfg, scfg: ServeConfig):
         self.scfg = scfg  # self.cfg (the effective model cfg) is set below
@@ -341,9 +383,13 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, toks, cache: lm.prefill(p, toks, cfg, cache=cache)
         )
-        v = cfg.vocab  # slice off vocab padding before argmax
+        v = cfg.vocab  # slice off vocab padding before sampling
+        # one-shot / stepped decode: sample the last position of every
+        # row with the shared seeded sampler (plain argmax at temp 0)
         self._sample = jax.jit(
-            lambda logits: jnp.argmax(logits[:, -1:, :v], axis=-1).astype(jnp.int32)
+            lambda logits, pos, temps, top_ks, top_ps, seeds: sample_tokens(
+                logits[:, -1, :v], temps, top_ks, top_ps, seeds, pos,
+            )[:, None]
         )
         # continuous mode: one mixed paged step + per-row sampling at each
         # row's own last valid chunk index, plus the fused decode loop
@@ -354,27 +400,29 @@ class Engine:
             )
         )
         self._decode_run = jax.jit(
-            lambda p, c, t, pos, tbl, scrub, cow, n: lm.paged_decode_loop(
+            lambda p, c, t, pos, tbl, scrub, cow, st, sk, sp_, ss, n:
+            lm.paged_decode_loop(
                 p, c, t, pos, tbl, n, cfg, max_steps=scfg.decode_block,
                 scrub_pages=scrub, cow_pages=cow,
+                sampling=(st, sk, sp_, ss),
             )
         )
+
         # sampling fused with the non-finite-logit watchdog: one dispatch
         # returns (token, row-is-clean) per row, so quarantine detection
-        # costs no extra Python->XLA round trip
-        self._sample_at = jax.jit(
-            lambda logits, idx: (
-                jnp.argmax(
-                    logits[jnp.arange(logits.shape[0]), idx, :v], axis=-1
-                ).astype(jnp.int32),
-                jnp.all(
-                    jnp.isfinite(
-                        logits[jnp.arange(logits.shape[0]), idx, :v]
-                    ),
-                    axis=-1,
-                ),
-            )
-        )
+        # costs no extra Python->XLA round trip.  The watchdog inspects
+        # the RAW pre-sampling logits; the PRNG key position is the
+        # sampled chunk index's own fed-stream position, so mixed-step
+        # samples and fused-loop samples of the same token use the same
+        # key (core/sampling.py)
+        def sample_at(logits, idx, positions, temps, top_ks, top_ps, seeds):
+            b = logits.shape[0]
+            rows = logits[jnp.arange(b), idx, :v]
+            pos = positions[jnp.arange(b), idx]
+            tok = sample_tokens(rows, temps, top_ks, top_ps, seeds, pos)
+            return tok, jnp.all(jnp.isfinite(rows), axis=-1)
+
+        self._sample_at = jax.jit(sample_at)
         # fault-injection helpers (no-ops unless an injector is set):
         # poison NaNs into selected logits rows / scribble garbage into a
         # free page of the paged cache (valid-looking slot positions —
@@ -528,8 +576,26 @@ class Engine:
             )
         return logits, cache
 
+    def _sampling_arrays(self, b: int):
+        """The config-default sampling params as ``[b]`` device arrays
+        (the one-shot/stepped paths apply one config to every row)."""
+        sp = self.scfg.sampling_params
+        top_k = TOP_K_DISABLED if sp.top_k is None else sp.top_k
+        return (
+            jnp.full((b,), sp.temperature, jnp.float32),
+            jnp.full((b,), top_k, jnp.int32),
+            jnp.full((b,), sp.top_p, jnp.float32),
+            jnp.full((b,), np.uint32(sp.seed), jnp.uint32),
+        )
+
     def generate(self, prompts: np.ndarray, n_tokens: int):
-        """prompts [B, S0] int32 -> tokens [B, S0 + n_tokens]."""
+        """prompts [B, S0] int32 -> tokens [B, S0 + n_tokens].
+
+        Decode samples with the config's ``temperature``/``top_k``/
+        ``top_p``/``seed`` (greedy at ``temperature=0``); output token
+        ``i`` is keyed on its fed-stream position ``s0 - 1 + i``, so it
+        is byte-identical to the continuous path's under the same
+        config."""
         cfg = self.cfg
         b, s0 = prompts.shape
         mode = self._resolve_prefill_mode()
@@ -545,36 +611,101 @@ class Engine:
         else:
             logits, cache = self._prefill_stepped(toks, cache)
         out = [toks]
-        cur = self._sample(logits)
+        samp = self._sampling_arrays(b)
+        pos = jnp.full((b,), s0 - 1, jnp.int32)
+        cur = self._sample(logits, pos, *samp)
         for i in range(n_tokens):
             out.append(cur)
             self.decode_calls += 1
             logits, cache = self._decode(
                 self.params, cache, cur, jnp.int32(s0 + i)
             )
-            cur = self._sample(logits)
+            cur = self._sample(logits, pos + (i + 1), *samp)
         return np.asarray(jnp.concatenate(out, axis=1))
 
     # --------------------------------------------- continuous batching
 
-    def _validate_request(self, i: int, prompt, n_tok: int) -> np.ndarray:
-        """Shape/size checks for one request; raises ValueError naming
-        the request index (``generate_requests`` runs this over the FULL
-        list before queueing anything, so a bad entry can never strand
-        earlier requests mid-list)."""
+    def _validate_request(
+        self, i: int, prompt, n_tok: int, *, check_size: bool = True
+    ) -> np.ndarray:
+        """Shape/content/size checks for one request; raises ValueError
+        naming the request index (``generate_requests`` runs this over
+        the FULL list before queueing anything, so a bad entry can never
+        strand earlier requests mid-list).  ``check_size=False`` skips
+        the oversize check for callers that turn oversize into a typed
+        ``rejected_too_large`` outcome instead (``serve_requests``)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] < 1:
             raise ValueError(f"request {i}: empty prompt")
         if n_tok < 1:
             raise ValueError(f"request {i}: n_tokens must be >= 1")
+        # out-of-vocab ids would be silently clamped by the embedding
+        # gather and decode garbage — reject them up front, by index
+        bad = (prompt < 0) | (prompt >= self.cfg.vocab)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ValueError(
+                f"request {i}: token id {int(prompt[j])} at position {j} "
+                f"is outside the vocab [0, {self.cfg.vocab})"
+            )
         total = prompt.shape[0] + n_tok - 1
-        if total > self.scfg.max_seq:
+        if check_size and total > self.scfg.max_seq:
             raise ValueError(
                 f"request {i}: prompt {prompt.shape[0]} + {n_tok} "
                 f"new tokens needs {total} cache positions, "
                 f"max_seq={self.scfg.max_seq}"
             )
         return prompt
+
+    def _sampling_list(self, sampling, n: int) -> List[SamplingParams]:
+        """Normalize the ``sampling`` argument: None (config defaults), a
+        single :class:`SamplingParams` for every request, or a
+        per-request sequence (None entries = config defaults)."""
+        default = self.scfg.sampling_params
+        if sampling is None:
+            return [default] * n
+        if isinstance(sampling, SamplingParams):
+            return [sampling] * n
+        out = [default if s is None else s for s in sampling]
+        if len(out) != n:
+            raise ValueError(
+                f"sampling has {len(out)} entries for {n} prompts"
+            )
+        for i, s in enumerate(out):
+            if not isinstance(s, SamplingParams):
+                raise ValueError(
+                    f"request {i}: sampling must be SamplingParams or "
+                    f"None, got {type(s).__name__}"
+                )
+        return out
+
+    def _stop_list(self, stop_tokens, n: int) -> List[Optional[frozenset]]:
+        """Normalize ``stop_tokens``: None, one flat id sequence applied
+        to every request, or a per-request sequence of id sequences
+        (None entries = no stop tokens).  Ids are vocab-range-checked."""
+
+        def _set(i, seq):
+            if seq is None:
+                return None
+            toks = frozenset(int(t) for t in seq)
+            for t in toks:
+                if not 0 <= t < self.cfg.vocab:
+                    raise ValueError(
+                        f"request {i}: stop token {t} is outside the "
+                        f"vocab [0, {self.cfg.vocab})"
+                    )
+            return toks or None
+
+        if stop_tokens is None:
+            return [None] * n
+        seq = list(stop_tokens)
+        if all(isinstance(t, (int, np.integer)) for t in seq):
+            return [_set(i, seq) for i in range(n)]
+        if len(seq) != n:
+            raise ValueError(
+                f"stop_tokens has {len(seq)} entries for {n} prompts"
+            )
+        return [_set(i, s) for i, s in enumerate(seq)]
 
     @staticmethod
     def _per_request(name, val, n, default):
@@ -592,6 +723,8 @@ class Engine:
         prompts: Sequence[np.ndarray],
         n_tokens,
         arrivals: Optional[Sequence[int]] = None,
+        sampling=None,
+        stop_tokens=None,
     ) -> List[np.ndarray]:
         """Continuous-batched generation over the paged KV cache.
 
@@ -619,10 +752,19 @@ class Engine:
         calls (``prefix_cache=True``): prompts sharing full pages with
         earlier requests — same call or earlier calls — skip prefill for
         those pages (docs/serving.md).
+
+        ``sampling`` is None (config defaults), one
+        :class:`~repro.core.sampling.SamplingParams` for every request,
+        or a per-request sequence; ``stop_tokens`` is None, one flat id
+        sequence for every request, or a per-request sequence of id
+        sequences — sampling any of them ends that request early (the
+        stop token is included in its output).
         """
         n = len(prompts)
         n_list = self._per_request("n_tokens", n_tokens, n, None)
         arr_list = self._per_request("arrivals", arrivals, n, 0)
+        samp_list = self._sampling_list(sampling, n)
+        stop_list = self._stop_list(stop_tokens, n)
         clean = [
             self._validate_request(i, p, n_list[i])
             for i, p in enumerate(prompts)
@@ -631,6 +773,7 @@ class Engine:
             Request(
                 rid=self._next_rid(), prompt=p,
                 max_new_tokens=n_list[i], arrival=arr_list[i],
+                sampling=samp_list[i], stop_tokens=stop_list[i],
             )
             for i, p in enumerate(clean)
         ]
@@ -644,6 +787,8 @@ class Engine:
         arrivals: Optional[Sequence[int]] = None,
         deadlines: Optional[Sequence[Optional[int]]] = None,
         cancel_at: Optional[Sequence[Optional[int]]] = None,
+        sampling=None,
+        stop_tokens=None,
     ) -> List[RequestResult]:
         """Robust continuous serving: every request gets a typed
         :class:`RequestResult`, never an engine exception.
@@ -662,14 +807,14 @@ class Engine:
         arr_list = self._per_request("arrivals", arrivals, n, 0)
         dl_list = self._per_request("deadlines", deadlines, n, None)
         cx_list = self._per_request("cancel_at", cancel_at, n, None)
+        samp_list = self._sampling_list(sampling, n)
+        stop_list = self._stop_list(stop_tokens, n)
         slots: List[Optional[Request]] = []
         results: List[Optional[RequestResult]] = []
         for i, prompt in enumerate(prompts):
-            prompt = np.asarray(prompt, np.int32).reshape(-1)
-            if prompt.shape[0] < 1:
-                raise ValueError(f"request {i}: empty prompt")
-            if n_list[i] < 1:
-                raise ValueError(f"request {i}: n_tokens must be >= 1")
+            prompt = self._validate_request(
+                i, prompt, n_list[i], check_size=False
+            )
             total = prompt.shape[0] + n_list[i] - 1
             if (
                 total > scfg.max_seq
@@ -691,6 +836,7 @@ class Engine:
                     rid=self._next_rid(), prompt=prompt,
                     max_new_tokens=n_list[i], arrival=arr_list[i],
                     deadline=dl_list[i], cancel_at=cx_list[i],
+                    sampling=samp_list[i], stop_tokens=stop_list[i],
                 )
             )
             results.append(None)
@@ -765,7 +911,10 @@ class Engine:
                     jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
                     jnp.asarray(plan.page_tables),
                     jnp.asarray(plan.scrub_pages),
-                    jnp.asarray(plan.cow_pages), jnp.int32(plan.n_steps),
+                    jnp.asarray(plan.cow_pages),
+                    jnp.asarray(plan.samp_temp), jnp.asarray(plan.samp_top_k),
+                    jnp.asarray(plan.samp_top_p), jnp.asarray(plan.samp_seed),
+                    jnp.int32(plan.n_steps),
                 )
                 try:
                     with faults.scoped(inj):
@@ -797,7 +946,10 @@ class Engine:
                 if mask is not None:
                     logits = self._poison(logits, jnp.asarray(mask))
             sampled, ok = self._sample_at(
-                logits, jnp.asarray(plan.sample_idx)
+                logits, jnp.asarray(plan.sample_idx),
+                jnp.asarray(plan.positions),
+                jnp.asarray(plan.samp_temp), jnp.asarray(plan.samp_top_k),
+                jnp.asarray(plan.samp_top_p), jnp.asarray(plan.samp_seed),
             )
             sched.commit(plan, np.asarray(sampled), ok=np.asarray(ok))
         cont["cache"] = cache

@@ -38,9 +38,12 @@ so readmission re-adopts instead of re-prefilling them), resets
 readmission the request replays its *fed stream* — ``prompt ‖ out[:-1]``
 — through the normal chunked-prefill path **without sampling** (every
 token it would sample is already known), then resumes decode by feeding
-``out[-1]`` at position :attr:`Request.fed_len`.  Greedy decode over
-recomputed KV is deterministic, so a preempted request's final output is
-byte-identical to an uninterrupted run (tests/test_faults.py).  Two
+``out[-1]`` at position :attr:`Request.fed_len`.  Decode over recomputed
+KV is deterministic at any temperature — sampling keys derive from
+(request seed, fed-stream position), not from slot or iteration
+(core/sampling.py) — so a preempted request's final output is
+byte-identical to an uninterrupted run, greedy or sampled
+(tests/test_faults.py, tests/test_sampling.py).  Two
 triggers: an injected allocator fault mid-plan, and *aging* — with
 ``preempt_after=N``, an admissible-size request stuck waiting ``N``
 iterations preempts the youngest running request (most recent
@@ -48,7 +51,11 @@ iterations preempts the youngest running request (most recent
 iterations, bounding thrash to one preemption per admission round).
 
 **Typed outcomes.**  A request always ends with a ``finish_reason``:
-``"length"`` (completed), ``"deadline_exceeded"``, ``"cancelled"``,
+``"length"`` (completed), ``"stop"`` (sampled one of its
+``stop_tokens``; the stop token is kept in the output, and inside a
+fused decode run the whole run is rewound to the earliest stop so block
+size never changes where a request finishes),
+``"deadline_exceeded"``, ``"cancelled"``,
 ``"rejected_capacity"`` (can never fit, or bounded queue full under the
 ``reject`` policy), or ``"numerical_error"`` (quarantined — the engine's
 non-finite-logit watchdog flagged the row; its pages are freed and
@@ -88,6 +95,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.sampling import TOP_K_DISABLED, SamplingParams
 from repro.serve.faults import InjectedAllocFault
 from repro.serve.paged_cache import (
     NULL_PAGE,
@@ -101,6 +109,7 @@ WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
 # Terminal per-request outcomes (Request.finish_reason / RequestResult).
 FINISH_LENGTH = "length"  # completed all max_new_tokens samples
+FINISH_STOP = "stop"  # sampled one of the request's stop_tokens
 FINISH_DEADLINE = "deadline_exceeded"
 FINISH_CANCELLED = "cancelled"
 FINISH_REJECTED_CAPACITY = "rejected_capacity"
@@ -109,6 +118,7 @@ FINISH_NUMERICAL = "numerical_error"  # quarantined by the NaN watchdog
 
 FINISH_REASONS = (
     FINISH_LENGTH,
+    FINISH_STOP,
     FINISH_DEADLINE,
     FINISH_CANCELLED,
     FINISH_REJECTED_CAPACITY,
@@ -133,6 +143,15 @@ class Request:
     arrival: int = 0  # scheduler iteration at which the request appears
     deadline: Optional[int] = None  # last iteration it may still run
     cancel_at: Optional[int] = None  # iteration at which it is cancelled
+    # per-request sampling knobs (core/sampling.py); keys derive from
+    # (sampling.seed, fed-stream position), so a request's sampled output
+    # never depends on batch slot, decode_block, or preemption history
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams
+    )
+    # sampling any of these token ids ends the request (the stop token
+    # IS recorded in `out`) with finish_reason="stop"
+    stop_tokens: Optional[frozenset] = None
     # -- runtime state --
     computed: int = 0  # cache positions written so far (prompt + fed decodes)
     out: List[int] = dataclasses.field(default_factory=list)
@@ -190,6 +209,11 @@ class StepPlan:
     page_tables: np.ndarray  # [B, P] int32, NULL_PAGE-padded
     sample_idx: np.ndarray  # [B] int32: row's last valid chunk index
     sample_mask: np.ndarray  # [B] bool: row emits a token this step
+    # per-row sampling params (core/sampling.py arrays; idle rows greedy)
+    samp_temp: np.ndarray  # [B] f32
+    samp_top_k: np.ndarray  # [B] int32 (TOP_K_DISABLED = no filter)
+    samp_top_p: np.ndarray  # [B] f32
+    samp_seed: np.ndarray  # [B] uint32
     rows: List[Optional[Request]]  # per-row request (None = idle)
     n_new: List[int]  # per-row positions written this step
     # pages freshly allocated this step (fixed width, NULL_PAGE-padded):
@@ -217,6 +241,11 @@ class DecodeRun:
     page_tables: np.ndarray  # [B, P] int32, NULL_PAGE-padded
     scrub_pages: np.ndarray  # fixed width, NULL_PAGE-padded
     cow_pages: np.ndarray  # [W, 2] (0, 0)-padded
+    # per-row sampling params (core/sampling.py arrays; idle rows greedy)
+    samp_temp: np.ndarray  # [B] f32
+    samp_top_k: np.ndarray  # [B] int32 (TOP_K_DISABLED = no filter)
+    samp_top_p: np.ndarray  # [B] f32
+    samp_seed: np.ndarray  # [B] uint32
     n_steps: int  # tokens every active row emits this run
     rows: List[Optional[Request]]
 
@@ -311,6 +340,13 @@ class Scheduler:
         self._run_positions = np.full((b,), -1, np.int32)
         self._run_scrub = np.full((self.run_scrub_width,), NULL_PAGE, np.int32)
         self._run_cow = np.full((self.cow_width, 2), NULL_PAGE, np.int32)
+        # per-row sampling params, shared by mixed steps and decode runs
+        # (safe: a row's request is the same within one plan's lifetime;
+        # idle rows sample greedy — their outputs are never read anyway)
+        self._samp_temp = np.zeros((b,), np.float32)
+        self._samp_top_k = np.full((b,), TOP_K_DISABLED, np.int32)
+        self._samp_top_p = np.ones((b,), np.float32)
+        self._samp_seed = np.zeros((b,), np.uint32)
         # per-row page-table staleness: the [B, P] buffer row is only
         # rewritten when the row's table actually changed
         self._table_stale = [True] * b
@@ -623,6 +659,25 @@ class Scheduler:
             self._tables[slot, : len(t)] = t
         self._table_stale[slot] = False
 
+    def _sync_samp_row(self, slot: int, req: Optional[Request]) -> None:
+        """Mirror the row's sampling params into the device-bound plan
+        buffers (idle rows reset to greedy defaults — their samples are
+        padding the scheduler never reads, and per-row sampling math
+        keeps them from influencing co-batched rows either way)."""
+        if req is None:
+            self._samp_temp[slot] = 0.0
+            self._samp_top_k[slot] = TOP_K_DISABLED
+            self._samp_top_p[slot] = 1.0
+            self._samp_seed[slot] = 0
+        else:
+            sp = req.sampling
+            self._samp_temp[slot] = sp.temperature
+            self._samp_top_k[slot] = (
+                TOP_K_DISABLED if sp.top_k is None else sp.top_k
+            )
+            self._samp_top_p[slot] = sp.top_p
+            self._samp_seed[slot] = np.uint32(sp.seed)
+
     def _grow_for_write(self, req, end: int, fresh, cow_pairs) -> None:
         """Allocate pages backing positions up to ``end`` and privatize
         shared pages in the write range.  An injected allocator fault
@@ -655,6 +710,7 @@ class Scheduler:
         for slot, req in enumerate(self.slots):
             if req is None:
                 self._sync_table_row(slot, None)
+                self._sync_samp_row(slot, None)
                 continue
             fl = req.fed_len
             if req.computed < fl:  # chunked (re)prefill of the fed stream
@@ -687,8 +743,10 @@ class Scheduler:
                 self._sample_mask[slot] = False
                 self.preempt(req, fault=True)
                 self._sync_table_row(slot, None)
+                self._sync_samp_row(slot, None)
                 continue
             self._sync_table_row(slot, req)
+            self._sync_samp_row(slot, req)
             self._sample_idx[slot] = n - 1
             self._sample_mask[slot] = sample
             rows[slot] = req
@@ -717,7 +775,9 @@ class Scheduler:
         self.allocator.note_scrubbed(fresh)
         return StepPlan(
             tokens, positions, self._tables, self._sample_idx,
-            self._sample_mask, rows, n_new, self._scrub, self._cow,
+            self._sample_mask, self._samp_temp, self._samp_top_k,
+            self._samp_top_p, self._samp_seed, rows, n_new,
+            self._scrub, self._cow,
         )
 
     def _event_horizon(self) -> Optional[int]:
@@ -758,6 +818,7 @@ class Scheduler:
         for slot, req in enumerate(self.slots):
             if req is None:
                 self._sync_table_row(slot, None)
+                self._sync_samp_row(slot, None)
                 continue
             tokens[slot, 0] = req.out[-1]
             positions[slot] = req.computed
@@ -770,8 +831,10 @@ class Scheduler:
                 positions[slot] = -1
                 self.preempt(req, fault=True)
                 self._sync_table_row(slot, None)
+                self._sync_samp_row(slot, None)
                 continue
             self._sync_table_row(slot, req)
+            self._sync_samp_row(slot, req)
             rows[slot] = req
         if len(fresh) > self.run_scrub_width:
             raise SchedulerInvariantError(
@@ -797,7 +860,8 @@ class Scheduler:
         self.allocator.note_scrubbed(fresh)
         return DecodeRun(
             tokens, positions, self._tables, self._run_scrub, self._run_cow,
-            k, rows,
+            self._samp_temp, self._samp_top_k, self._samp_top_p,
+            self._samp_seed, k, rows,
         )
 
     def tick(self) -> None:
@@ -851,8 +915,11 @@ class Scheduler:
         tokens, publish finished prompt pages, retire finished requests
         (their non-shared pages return to the pool and the row frees for
         next iteration's admission).  ``ok`` is the watchdog verdict per
-        row (sampled logits all finite); a False row is quarantined
-        instead of extended — its garbage sample is never recorded."""
+        row (PRE-sampling logits all finite); a False row is quarantined
+        instead of extended — its garbage sample is never recorded.  A
+        sampled stop token finishes the row as ``"stop"`` (taking
+        precedence over a simultaneous length finish; the stop token is
+        recorded in the output)."""
         self.iteration += 1
         for slot, req in enumerate(plan.rows):
             if req is None:
@@ -863,8 +930,11 @@ class Scheduler:
                 if ok is not None and not bool(ok[slot]):
                     self._quarantine(slot, req)
                     continue
-                req.out.append(int(sampled[slot]))
-                if len(req.out) >= req.max_new_tokens:
+                tok = int(sampled[slot])
+                req.out.append(tok)
+                if req.stop_tokens and tok in req.stop_tokens:
+                    self._finish(slot, req, FINISH_STOP)
+                elif len(req.out) >= req.max_new_tokens:
                     self._finish(slot, req, FINISH_LENGTH)
 
     def commit_run(
@@ -875,22 +945,51 @@ class Scheduler:
     ) -> None:
         """Apply a fused decode run: every active row advances ``n_steps``
         positions and gains ``n_steps`` sampled tokens.  ``bad_at`` is
-        the in-loop watchdog verdict: the first loop index whose logits
-        were non-finite for that row (>= n_steps when clean).  A poisoned
-        row keeps only its pre-fault tokens and is quarantined."""
+        the in-loop watchdog verdict: the first loop index whose
+        (pre-sampling) logits were non-finite for that row (>= n_steps
+        when clean).  A poisoned row keeps only its pre-fault tokens and
+        is quarantined.
+
+        **Stop-token rewind.**  Stop tokens are a schedule-visible event
+        the planner cannot see in advance (deadlines enter the event
+        horizon; a sampled token does not exist until the run executes),
+        so they are enforced post-hoc: the earliest stop across the batch
+        truncates the WHOLE run to ``trunc = j + 1`` iterations — every
+        row keeps only ``trunc`` tokens and the clock advances ``trunc``.
+        The discarded suffix is pure speculation that never happened:
+        re-decoding it later reproduces the same tokens byte-for-byte
+        (position-keyed sampling; KV rewrites of the same positions are
+        deterministic, and stale future entries are masked by the
+        ``k_pos <= q_pos`` causal guard).  The resulting schedule is
+        therefore identical to ``decode_block=1`` — a stopping request
+        frees its row/pages at the same iteration, so admission timing
+        does not depend on run length (tests/test_sampling.py)."""
         k = run.n_steps
-        self.iteration += k
+        trunc = k
+        stop_at: Dict[int, int] = {}
+        for slot, req in enumerate(run.rows):
+            if req is None or not req.stop_tokens:
+                continue
+            bad = int(bad_at[slot]) if bad_at is not None else k
+            for j in range(min(k, bad)):
+                if int(sampled[slot, j]) in req.stop_tokens:
+                    stop_at[slot] = j
+                    trunc = min(trunc, j + 1)
+                    break
+        self.iteration += trunc
         for slot, req in enumerate(run.rows):
             if req is None:
                 continue
             bad = int(bad_at[slot]) if bad_at is not None else k
-            if bad < k:
+            if bad < trunc:
                 req.computed += bad
                 req.out.extend(int(x) for x in sampled[slot, :bad])
                 self._quarantine(slot, req)
                 continue
-            req.computed += k
-            req.out.extend(int(x) for x in sampled[slot, :k])
+            req.computed += trunc
+            req.out.extend(int(x) for x in sampled[slot, :trunc])
             self._register_prefix(req)
-            if len(req.out) >= req.max_new_tokens:
+            if stop_at.get(slot) == trunc - 1:
+                self._finish(slot, req, FINISH_STOP)
+            elif len(req.out) >= req.max_new_tokens:
                 self._finish(slot, req, FINISH_LENGTH)
