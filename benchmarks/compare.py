@@ -60,6 +60,17 @@ TRACKED_RATIOS = (
     # overload workload — an exact property of preemption + typed
     # outcomes (must stay 1.0; serve_bench.bench_overload)
     "overload_completion_ratio",
+    # self-speculative decoding (serve_bench.bench_spec): spec-engine
+    # throughput vs the plain continuous engine on the same greedy
+    # workload — timing-derived, loose tolerance.  A collapse means the
+    # draft/verify plumbing went pathological (e.g. rollback thrash).
+    "spec_vs_plain_throughput",
+    # fraction of draft proposals the target verified: the bench drafts
+    # at the target's own ladder rung (draft == target), so this is
+    # exactly 1.0 by construction — an acceptance-indexing or
+    # draft/verify-divergence bug is the only thing that can move it
+    # (near-zero tolerance, like the byte ratios)
+    "acceptance_rate",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get
@@ -70,6 +81,12 @@ RATIO_TOL = 0.01
 RATIO_TOLS = {
     "continuous_vs_oneshot_throughput": 0.15,
     "sampled_vs_greedy_throughput": 0.15,
+    # spec decode times TWO engines' short workloads, so run-to-run
+    # noise is roughly double the other throughput ratios (observed
+    # ~0.67-1.1 on one idle host); the gate exists to catch pathological
+    # collapse — rollback thrash or a fall back to per-token dispatch
+    # lands near 0.1 and trips even this loose budget
+    "spec_vs_plain_throughput": 0.5,
 }
 
 

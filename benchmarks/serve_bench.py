@@ -39,6 +39,14 @@ sampled bytes == stepped sampled bytes, sampled output actually
 diverges from greedy, greedy bytes unchanged by the sampler, stop
 tokens fire, and the 2-trace compile budget holds with sampling fused
 in-loop.
+
+Speculative-decode row: ``serve_spec_decode`` serves the greedy workload
+through a spec-enabled engine (2/8-tightened draft proposing inside each
+fused window, one multi-token verify — docs/serving.md "Speculative
+decoding") and reports ``acceptance_rate`` plus
+``spec_vs_plain_throughput`` (both tracked in compare.py).  ``python -m
+benchmarks.serve_bench --check-spec`` is the live CI smoke for the
+byte-exactness contract.
 """
 
 from __future__ import annotations
@@ -191,6 +199,43 @@ def bench_overload(params, cfg, passes):
     ]
 
 
+def bench_spec(params, cfg, ckw, prompts, n_new, passes, tps_plain):
+    """Self-speculative decoding on the DBB density ladder vs the plain
+    continuous engine, same greedy workload (docs/serving.md
+    "Speculative decoding").
+
+    The draft here is the DEGENERATE rung — ``draft_nnz`` equal to the
+    target's own bound, so draft == target and every proposal must
+    verify.  On this random-weight smoke model a genuinely tighter rung
+    proposes at chance level (~1/vocab acceptance, a coin flip across
+    BLAS builds), which would make the gates noise; the degenerate rung
+    instead makes both tracked keys exact: ``acceptance_rate`` must be
+    1.0 (any acceptance-indexing or draft/verify-divergence bug drops
+    it — gated tight in benchmarks/compare.py) and
+    ``spec_vs_plain_throughput`` isolates the draft+verify plumbing
+    overhead at full acceptance (timing-derived, loose tolerance).  The
+    accuracy-driven acceptance of real lower rungs needs trained
+    weights; only the exactness contract is measurable here."""
+    from repro.serve.engine import Engine, ServeConfig, SpecConfig
+
+    eng = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(draft="nnz", draft_nnz=cfg.sparsity.a_nnz), **ckw
+    ))
+    eng.generate(prompts, n_new)  # warmup/compile
+    s = _time_once(lambda: eng.generate(prompts, n_new), passes)
+    tok = prompts.shape[0] * n_new
+    tps = tok / s
+    stats = eng.spec_stats()
+    return [
+        {"impl": "serve_spec_decode", "us": round(s * 1e6, 1),
+         "tokens_per_s": round(tps, 1),
+         "acceptance_rate": round(stats["acceptance_rate"], 3),
+         "spec_runs": stats["spec_runs"],
+         "paged_compiles": eng.paged_compiles},
+        {"spec_vs_plain_throughput": round(tps / tps_plain, 3)},
+    ]
+
+
 def bench_serve(smoke: bool = False):
     from repro import configs
     from repro.models import lm
@@ -267,6 +312,7 @@ def bench_serve(smoke: bool = False):
         # benchmarks/compare.py (see module docstring)
         {"continuous_vs_oneshot_throughput": round(tps_cont / tps_one, 3)},
         {"sampled_vs_greedy_throughput": round(tps_samp / tps_cont, 3)},
+        *bench_spec(params, cfg, ckw, prompts, n_new, passes, tps_cont),
         *bench_prefix_cache(params, cfg, b),
         *bench_overload(params, cfg, passes),
         *kv_rows,
@@ -484,6 +530,86 @@ def check_sampling() -> int:
     return 1 if failures else 0
 
 
+def check_spec() -> int:
+    """CI smoke gate for self-speculative decoding: one live
+    mini-workload asserts the exactness contract end to end
+    (docs/serving.md "Speculative decoding") — spec output byte-
+    identical to the plain continuous engine for both draft kinds,
+    nonzero proposals, acceptance_rate == 1.0 when the draft IS the
+    target (int8 wire on both sides — pins acceptance indexing), a stop
+    token inside a draft window truncating exactly, and the 3-trace
+    compile budget.  Returns a process exit code."""
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine, ServeConfig, SpecConfig
+
+    cfg = dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True),
+        vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32",
+    )
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32)
+        for s in (9, 5, 12)
+    ]
+    n_tok = 10
+    ckw = dict(
+        prefill_mode="continuous", max_seq=32, page_size=8,
+        max_batch=2, prefill_chunk=4, prefix_cache=False,
+    )
+    failures = []
+    plain = Engine(params, cfg, ServeConfig(**ckw)).generate_requests(
+        prompts, n_tok
+    )
+    spec_eng = None
+    for draft in ("nnz", "int8_wire"):
+        spec_eng = Engine(params, cfg, ServeConfig(
+            spec=SpecConfig(draft=draft, draft_nnz=2), **ckw
+        ))
+        out = spec_eng.generate_requests(prompts, n_tok)
+        for i, (a, b_) in enumerate(zip(out, plain)):
+            if not np.array_equal(a, b_):
+                failures.append(f"draft={draft} request {i}: bytes diverged")
+        if spec_eng.spec_stats()["proposed"] == 0:
+            failures.append(f"draft={draft}: no proposals made")
+    if spec_eng.paged_compiles != 3:
+        failures.append(
+            f"paged_compiles != 3 with spec: {spec_eng.paged_compiles}"
+        )
+    # draft == target (int8 wire both sides): every proposal must verify
+    ident = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(draft="int8_wire"),
+        pack_weights=True, wire_dtype="int8", **ckw
+    ))
+    ident.generate_requests(prompts, n_tok)
+    rate = ident.spec_stats()["acceptance_rate"]
+    if rate != 1.0:
+        failures.append(f"identical-draft acceptance_rate != 1.0: {rate}")
+    # stop token sampled inside a draft window truncates exactly
+    stop = int(plain[0][len(prompts[0]) + 2])
+    seng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **ckw))
+    res = seng.serve_requests(prompts[:1], n_tok, stop_tokens=[stop])
+    if res[0].finish_reason != "stop":
+        failures.append(f"stop inside window did not fire: {res[0].finish_reason!r}")
+    elif int(res[0].tokens[-1]) != stop:
+        failures.append("stop token not the final output token")
+    elif not np.array_equal(
+        res[0].tokens, plain[0][: len(prompts[0]) + 3]
+    ):
+        failures.append("stop-truncated output != plain prefix")
+    for line in failures:
+        print(f"check-spec FAIL: {line}")
+    if not failures:
+        print(
+            "check-spec ok: both draft kinds byte-identical over "
+            f"{len(prompts)} requests, identical-draft acceptance=1.0, "
+            f"paged_compiles={spec_eng.paged_compiles}, "
+            f"stop fired at {res[0].n_generated} tokens"
+        )
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
     import sys
 
@@ -494,5 +620,7 @@ if __name__ == "__main__":
         sys.exit(check_chaos())
     if "--check-sampling" in sys.argv:
         sys.exit(check_sampling())
+    if "--check-spec" in sys.argv:
+        sys.exit(check_spec())
     for row in bench_serve(smoke="--smoke" in sys.argv)[0]:
         print(row)

@@ -86,6 +86,24 @@ class SparsityConfig:
             return None  # dense bypass
         return DAPSpec(nnz=nnz, bz=self.bz)
 
+    def tighten(self, a_nnz: int) -> "SparsityConfig":
+        """A tighter rung of the DBB density ladder: the same weights
+        under a stricter activation bound ``a_nnz`` (paper §5.2 — the
+        ladder runs 8/8 down to 2/8 on one weight tensor).  This is what
+        makes a *draft model free* for self-speculative decoding: the
+        tightened config shares parameters, tokenization, cache layout
+        (``kv_dtype``/``paged_attn`` are preserved), and memory residency
+        with the target; only the activation datapath gets cheaper and
+        less accurate (serve/engine.py ``SpecConfig``).  Any per-layer
+        override list is dropped — the draft bound applies uniformly."""
+        if not 1 <= a_nnz <= self.bz:
+            raise ValueError(
+                f"draft a_nnz must be in [1, bz={self.bz}], got {a_nnz}"
+            )
+        return dataclasses.replace(
+            self, mode="awdbb", a_nnz=a_nnz, a_nnz_per_layer=None
+        )
+
 
 DENSE = SparsityConfig(mode="dense")
 WDBB_4_8 = SparsityConfig(mode="wdbb", w_nnz=4)

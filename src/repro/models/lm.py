@@ -482,6 +482,52 @@ def paged_decode_loop(params, cache, tokens, positions, page_tables,
     return out, bad_at, cache
 
 
+def paged_verify(params, cache, tokens, positions, page_tables, cfg,
+                 sampling=None):
+    """Single-pass speculative-decode verification over the paged cache.
+
+    ``tokens/positions [B, S]`` carry, per row, the *candidate fed
+    stream* of one speculation window: the row's last committed token
+    followed by its draft proposals, at consecutive absolute positions
+    (−1-padded past the window, like any mixed step).  One
+    :func:`paged_step` call recomputes every window position under the
+    TARGET config — overwriting whatever draft-config KV the proposal
+    loop left at those slots (each layer writes its window K/V before
+    attending, so the gathered context is target-computed end to end;
+    this is exactly the chunked-prefill mechanics the byte-exactness
+    suite already pins) — then samples a token at EVERY window index
+    with the shared seeded sampler keyed on that index's own fed-stream
+    position.  Index ``j`` therefore yields precisely the token solo
+    target decode would emit after the row's committed stream extended
+    by proposals ``d_1..d_j`` — the engine's acceptance rule keeps the
+    longest prefix where those proposals match (serve/engine.py).
+
+    ``sampling`` is the per-row ``(temps, top_ks, top_ps, seeds)``
+    tuple (None = all-greedy argmax).  Returns ``(sampled [B, S] int32,
+    ok [B, S] bool, new_cache)``; ``ok`` is the numerical watchdog —
+    per index, whether the raw pre-sampling logits were all finite.
+    """
+    from repro.core import sampling as sampling_mod
+
+    b, s = tokens.shape
+    v = cfg.vocab  # slice off vocab padding before sampling
+    logits, cache = paged_step(
+        params, cache, tokens, positions, page_tables, cfg
+    )
+    rows = logits[:, :, :v].reshape(b * s, v)
+    if sampling is None:
+        tok = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+    else:
+        temps, top_ks, top_ps, seeds = sampling
+        rep = lambda a: jnp.repeat(a, s)  # noqa: E731
+        tok = sampling_mod.sample_tokens(
+            rows, rep(temps), rep(top_ks), rep(top_ps), rep(seeds),
+            positions.reshape(-1),
+        )
+    ok = jnp.all(jnp.isfinite(rows), axis=-1)
+    return tok.reshape(b, s), ok.reshape(b, s), cache
+
+
 def prefill(params, tokens, cfg, cache=None):
     """Prefill: forward pass; if ``cache`` given, also fills it and returns
     (logits, cache) — logits only otherwise.

@@ -73,6 +73,47 @@ logger = logging.getLogger(__name__)
 BATCHED_PREFILL_FAMILIES = ("dense", "moe", "vlm")
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Greedy self-speculative decoding on the DBB density ladder
+    (docs/serving.md "Speculative decoding").
+
+    The *draft model* is the target's own weights at a cheaper rung of
+    the ladder — S2TA's observation that one weight tensor admits a
+    whole family of density bounds with predictable cost at each rung:
+
+    * ``draft="nnz"`` — the target config tightened to
+      ``a_nnz=draft_nnz`` (``SparsityConfig.tighten``; e.g. 2/8 draft
+      proposals for a 4/8 target).  Shares parameters outright.
+    * ``draft="int8_wire"`` — the int8 wire format as the cheap rung:
+      the same weights quantized to int8 values + bitmask + scales
+      (~4x fewer weight bytes per proposal step).  When the target
+      already serves the int8 wire this degenerates to draft == target
+      (acceptance ~1.0) — valid, just pointless.
+
+    The draft shares the target's tokenizer, cache layout, page tables,
+    and memory residency; its speculation window is
+    ``ServeConfig.decode_block`` (spec runs ride the scheduler's fused
+    :class:`~repro.serve.scheduler.DecodeRun` plans).  Acceptance is a
+    pure comparison of the target's own per-position tokens against the
+    proposals, so speculative output is byte-identical to solo target
+    decode — a *verified* speedup, not a statistical one.
+    """
+
+    draft: str = "nnz"  # nnz | int8_wire (which ladder rung drafts)
+    draft_nnz: int = 2  # activation bound of the "nnz" draft rung
+
+    def __post_init__(self):
+        if self.draft not in ("nnz", "int8_wire"):
+            raise ValueError(
+                f"unknown draft kind {self.draft!r}; nnz|int8_wire"
+            )
+        if self.draft_nnz < 1:
+            raise ValueError(
+                f"draft_nnz must be >= 1, got {self.draft_nnz}"
+            )
+
+
 @dataclasses.dataclass
 class ServeConfig:
     """Serving knobs.
@@ -167,6 +208,14 @@ class ServeConfig:
     max_queue: Optional[int] = None  # bounded admission queue (None = ∞)
     backpressure: str = "reject"  # queue-full policy: reject | block
     preempt_after: Optional[int] = None  # aging preemption threshold
+    # --- self-speculative decoding (docs/serving.md) ---
+    # When set, decode-only batches run draft-then-verify instead of the
+    # plain fused loop: a cheap ladder-rung draft proposes up to
+    # decode_block - 1 tokens over the TARGET's paged cache, then one
+    # multi-token target step verifies the whole window and keeps the
+    # longest agreeing prefix plus one bonus token.  Output bytes are
+    # identical to spec=None.  Requires prefill_mode="continuous".
+    spec: Optional[SpecConfig] = None
 
     def __post_init__(self):
         validate_sampling(
@@ -206,6 +255,11 @@ class ServeConfig:
         if self.decode_block < 1:
             raise ValueError(
                 f"decode_block must be >= 1, got {self.decode_block}"
+            )
+        if self.spec is not None and self.prefill_mode != "continuous":
+            raise ValueError(
+                "speculative decoding requires prefill_mode='continuous', "
+                f"got {self.prefill_mode!r}"
             )
         if self.max_pages is not None:
             need = self.pages_per_request + 1
@@ -263,6 +317,25 @@ class RequestResult:
         return self.finish_reason in (FINISH_LENGTH, FINISH_STOP)
 
 
+def spec_accept(draft_row, target_row, k: int) -> int:
+    """Greedy-speculative acceptance count for one row: how many of the
+    target's ``k`` verified tokens to keep (always >= 1).
+
+    The verify window fed ``[t_0, d_1, .., d_{k-1}]`` (committed last
+    token, then draft proposals); ``target_row[j]`` is the target's own
+    token sampled at window index ``j`` — exactly the token solo decode
+    would emit after the first ``j`` proposals.  So the kept prefix is
+    the longest run where each proposal matched the target token that
+    *preceded* it, plus one bonus token: the target's token at the first
+    divergent index is itself correct output (its fed prefix matched).
+    ``k=1`` (no proposals) keeps the one target token — normal decode.
+    """
+    a = 1
+    while a < k and int(draft_row[a - 1]) == int(target_row[a - 1]):
+        a += 1
+    return a
+
+
 def pack_params_for_serving(params, cfg, wire_dtype: str = "native"):
     """Convert every DBB-eligible linear to packed wire format.
 
@@ -311,6 +384,7 @@ class Engine:
                 f"wdbb/awdbb sparsity mode (got pack_weights="
                 f"{scfg.pack_weights}, mode={cfg.sparsity.mode!r})"
             )
+        raw_params = params  # pre-wire leaves (int8_wire draft packs these)
         if packing:
             params = pack_params_for_serving(params, cfg, scfg.wire_dtype)
         self.params = params
@@ -348,6 +422,34 @@ class Engine:
         if sp is not cfg.sparsity:
             cfg = dataclasses.replace(cfg, sparsity=sp)
         self.cfg = cfg
+        # --- self-speculative decoding (docs/serving.md) ---
+        # Draft PARAMS are fixed here; the draft CONFIG is derived from
+        # self.cfg inside _build_jitted so the fused->gather fallback
+        # rebuilds the draft on the gather path too.
+        self._spec = scfg.spec
+        self.draft_cfg = None
+        self._draft_params = None
+        self.spec_runs = 0
+        self.spec_proposed = 0  # draft tokens offered for verification
+        self.spec_accepted = 0  # proposals the target agreed with
+        self.spec_emitted = 0  # tokens committed by spec runs (pre-stop)
+        if self._spec is not None:
+            if self._spec.draft == "nnz":
+                # tighten() validates draft_nnz against this model's bz
+                cfg.sparsity.tighten(self._spec.draft_nnz)
+                self._draft_params = self.params
+            elif scfg.wire_dtype == "int8":
+                # target already rides the int8 wire: draft == target
+                self._draft_params = self.params
+            else:
+                if cfg.sparsity.mode not in ("wdbb", "awdbb"):
+                    raise ValueError(
+                        "SpecConfig(draft='int8_wire') needs a wdbb/awdbb "
+                        f"sparsity mode to pack, got {cfg.sparsity.mode!r}"
+                    )
+                self._draft_params = pack_params_for_serving(
+                    raw_params, cfg, "int8"
+                )
         self._build_jitted()
         # dispatch instrumentation (see tests/test_serve.py): python-level
         # calls into the jitted prefill/decode/paged-step functions
@@ -407,6 +509,39 @@ class Engine:
                 sampling=(st, sk, sp_, ss),
             )
         )
+        # speculative decoding (SpecConfig): the greedy draft loop on the
+        # cheap ladder rung, and the single-pass multi-token verify step
+        # under the TARGET config.  Both run over the target's paged
+        # cache: the draft's in-window KV writes are deterministically
+        # overwritten by the verify pass before any committed read, and
+        # rejected suffixes are rolled back via PageAllocator.truncate_to
+        # (docs/serving.md "Speculative decoding").
+        self._draft_run = None
+        self._verify = None
+        if self._spec is not None:
+            sp_draft = cfg.sparsity
+            if self._spec.draft == "nnz":
+                sp_draft = sp_draft.tighten(self._spec.draft_nnz)
+            else:
+                # int8 wire draft: per-row activation scales, like every
+                # int8 path the engine serves
+                sp_draft = dataclasses.replace(sp_draft, act_scale="per_row")
+            dcfg = dataclasses.replace(cfg, sparsity=sp_draft)
+            self.draft_cfg = dcfg
+            self._draft_run = jax.jit(
+                lambda p, c, t, pos, tbl, scrub, cow, n:
+                lm.paged_decode_loop(
+                    p, c, t, pos, tbl, n, dcfg,
+                    max_steps=scfg.decode_block,
+                    scrub_pages=scrub, cow_pages=cow,
+                )
+            )
+            self._verify = jax.jit(
+                lambda p, c, t, pos, tbl, st, sk, sp_, ss:
+                lm.paged_verify(
+                    p, c, t, pos, tbl, cfg, sampling=(st, sk, sp_, ss)
+                )
+            )
 
         # sampling fused with the non-finite-logit watchdog: one dispatch
         # returns (token, row-is-clean) per row, so quarantine detection
@@ -462,12 +597,18 @@ class Engine:
     @property
     def paged_compiles(self) -> int:
         """Compiled trace count of the continuous loop's jitted entry
-        points (`_paged_step` + `_decode_run`) — the serve_bench
+        points (`_paged_step` + `_decode_run`, plus `_draft_run` +
+        `_verify` when speculative decoding is on) — the serve_bench
         compile-count row.  The bucketed plan shapes keep this at 2 (one
         mixed-step trace + one decode-loop trace) regardless of batch
-        composition, chunk churn, or run length."""
+        composition, chunk churn, or run length; a spec engine holds 3
+        (mixed step + draft loop + verify step — `_decode_run` is never
+        dispatched when spec is on)."""
+        fs = [self._paged_step, self._decode_run]
+        if self._spec is not None:
+            fs += [self._draft_run, self._verify]
         n = 0
-        for f in (self._paged_step, self._decode_run):
+        for f in fs:
             try:
                 n += f._cache_size()
             except Exception:
@@ -499,8 +640,29 @@ class Engine:
             out["injected_alloc_faults"] = self._injector.alloc_faults
             out["injected_fused_faults"] = self._injector.fused_faults
             out["injected_nan_poisons"] = self._injector.nan_poisons
+            out["injected_draft_nan_poisons"] = (
+                self._injector.draft_nan_poisons
+            )
             out["injected_scribbles"] = self._injector.scribbles
         return out
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative-decoding counters (zeros unless ``ServeConfig.spec``
+        is set and continuous mode ran).  ``acceptance_rate`` is the
+        fraction of draft proposals the target verified — the lever that
+        turns the cheap rung's proposals into real speedup; ``emitted``
+        counts committed tokens including the always-kept bonus token
+        (before stop-token truncation)."""
+        proposed = self.spec_proposed
+        return {
+            "spec_runs": self.spec_runs,
+            "proposed": proposed,
+            "accepted": self.spec_accepted,
+            "emitted": self.spec_emitted,
+            "acceptance_rate": (
+                self.spec_accepted / proposed if proposed else 0.0
+            ),
+        }
 
     def _merge_health(self, stats: Dict[str, int]) -> None:
         for key, val in stats.items():
@@ -852,6 +1014,109 @@ class Engine:
             )
         return results
 
+    def _dispatch_spec(self, plan: DecodeRun, cache, inj):
+        """One speculative draft-then-verify round for a fused decode
+        plan (docs/serving.md "Speculative decoding").
+
+        The draft loop proposes ``k - 1`` greedy tokens on the cheap
+        ladder rung, writing its (transient) KV into the TARGET's paged
+        cache; one multi-token target step then recomputes every window
+        position — overwriting the draft KV exactly like a chunked
+        prefill — and samples the target's own token at each index with
+        the position-keyed shared sampler.  Returns per-row kept counts,
+        the [B, decode_block] target tokens, per-row quarantine verdicts,
+        and the updated cache; the scheduler commits kept prefixes and
+        rolls rejected suffix pages back (``commit_spec``)."""
+        scfg = self.scfg
+        k = plan.n_steps
+        b = plan.tokens.shape[0]
+        n_draft = k - 1
+        self.spec_runs += 1
+        # --- draft: propose n_draft greedy tokens on the cheap rung.
+        # Dispatched even at n_draft=0 so the run's scrub/CoW page
+        # maintenance happens exactly once, like the plain fused loop.
+        draft_args = (
+            self._draft_params, cache,
+            jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
+            jnp.asarray(plan.page_tables),
+            jnp.asarray(plan.scrub_pages), jnp.asarray(plan.cow_pages),
+            jnp.int32(n_draft),
+        )
+        try:
+            with faults.scoped(inj):
+                draft_toks, draft_bad, cache = self._draft_run(*draft_args)
+        except faults.FusedKernelFault as err:
+            self._fallback_to_gather(err)
+            with faults.scoped(inj):
+                draft_toks, draft_bad, cache = self._draft_run(*draft_args)
+        draft_toks = np.asarray(draft_toks)
+        draft_bad = np.asarray(draft_bad)
+        if inj is not None and n_draft:
+            mask = inj.draft_poison_mask(plan.rows)
+            if mask is not None:
+                # force the draft watchdog verdict bad-at-step-0 (the
+                # loop's logits never leave the fused dispatch)
+                draft_bad = np.where(mask, 0, draft_bad)
+        # --- verify feed: committed last token at index 0, proposals at
+        # 1..k-1, positions p0..p0+k-1; padded to the static decode_block
+        # width (position -1 -> null page, inert) so the verify trace is
+        # compiled once
+        ver_toks = np.zeros((b, scfg.decode_block), np.int32)
+        ver_pos = np.full((b, scfg.decode_block), -1, np.int32)
+        for slot, req in enumerate(plan.rows):
+            if req is None:
+                continue
+            ver_toks[slot, 0] = plan.tokens[slot, 0]
+            if n_draft:
+                ver_toks[slot, 1:k] = draft_toks[slot, :n_draft]
+            p0 = int(plan.positions[slot])
+            ver_pos[slot, :k] = np.arange(p0, p0 + k, dtype=np.int32)
+        ver_args = (
+            self.params, cache,
+            jnp.asarray(ver_toks), jnp.asarray(ver_pos),
+            jnp.asarray(plan.page_tables),
+            jnp.asarray(plan.samp_temp), jnp.asarray(plan.samp_top_k),
+            jnp.asarray(plan.samp_top_p), jnp.asarray(plan.samp_seed),
+        )
+        try:
+            with faults.scoped(inj):
+                sampled, ok, cache = self._verify(*ver_args)
+        except faults.FusedKernelFault as err:
+            self._fallback_to_gather(err)
+            with faults.scoped(inj):
+                sampled, ok, cache = self._verify(*ver_args)
+        sampled = np.asarray(sampled)
+        ok = np.asarray(ok)
+        # --- acceptance + watchdogs (host side, pure comparisons)
+        kept = np.zeros((b,), np.int32)
+        bad = np.zeros((b,), bool)
+        for slot, req in enumerate(plan.rows):
+            if req is None:
+                continue
+            if n_draft and int(draft_bad[slot]) < n_draft:
+                # non-finite draft logits: trust nothing from this round
+                bad[slot] = True
+                continue
+            a = spec_accept(draft_toks[slot], sampled[slot], k)
+            bad_idx = k
+            for j in range(k):
+                if not ok[slot, j]:
+                    bad_idx = j
+                    break
+            if bad_idx < a:
+                # target logits went non-finite inside the kept prefix:
+                # keep the clean tokens before it, quarantine the row
+                # (badness in the rejected suffix is discarded anyway)
+                bad[slot] = True
+                kept[slot] = bad_idx
+            else:
+                kept[slot] = a
+            self.spec_proposed += n_draft
+            self.spec_accepted += a - 1
+        self.spec_emitted += int(kept.sum())
+        self.fused_tokens += int(kept.sum())
+        return kept, sampled, bad, cache
+
     def _serve(self, reqs: Sequence[Request]) -> None:
         """Run the continuous loop until every request in ``reqs`` has a
         terminal outcome.  Dispatch errors from an injected fused-kernel
@@ -904,8 +1169,14 @@ class Engine:
             self.step_calls += 1
             if isinstance(plan, DecodeRun):
                 self.decode_run_calls += 1
-                self.fused_tokens += plan.n_steps
                 self._step_shapes.add(("run",))
+                if self._spec is not None:
+                    kept, sampled, bad, cache = self._dispatch_spec(
+                        plan, cache, inj
+                    )
+                    sched.commit_spec(plan, kept, sampled, bad_rows=bad)
+                    continue
+                self.fused_tokens += plan.n_steps
                 args = (
                     self.params, cache,
                     jnp.asarray(plan.tokens), jnp.asarray(plan.positions),

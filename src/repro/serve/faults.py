@@ -70,6 +70,14 @@ class FaultConfig:
     fail_fused: bool = False  # force the fused kernel to fail (once)
     nan_rids: Tuple[int, ...] = ()  # rids whose first sampled logits go NaN
     scrub_corrupt_p: float = 0.0  # P(scribble a free page) per step
+    # rids whose DRAFT logits go non-finite during their first
+    # speculative proposal loop: the draft loop's in-loop watchdog
+    # verdict is forced bad for that row (the loop's logits are internal
+    # to one fused dispatch, so — unlike nan_rids — the poison is
+    # applied to the watchdog output rather than the logits themselves);
+    # the engine must quarantine exactly that row, with co-batched
+    # healthy rows byte-identical to a fault-free run
+    nan_draft_rids: Tuple[int, ...] = ()
 
     def __post_init__(self):
         for name in ("alloc_fail_p", "scrub_corrupt_p"):
@@ -90,10 +98,12 @@ class FaultInjector:
         self._rng = np.random.default_rng(cfg.seed)
         self._fused_pending = cfg.fail_fused
         self._poisoned: set = set()
+        self._draft_poisoned: set = set()
         # fired-fault counters (surfaced via Engine.health())
         self.alloc_faults = 0
         self.fused_faults = 0
         self.nan_poisons = 0
+        self.draft_nan_poisons = 0
         self.scribbles = 0
 
     # ------------------------------------------------------ allocator hook
@@ -141,6 +151,24 @@ class FaultInjector:
                 self._poisoned.add(req.rid)
                 mask[slot] = True
                 self.nan_poisons += 1
+        return mask if mask.any() else None
+
+    def draft_poison_mask(self, rows) -> Optional[np.ndarray]:
+        """Rows of this speculative run whose draft-loop watchdog verdict
+        should be forced bad: listed rids, at their first spec run only.
+        None when nothing fires (see ``nan_draft_rids``)."""
+        if not self.cfg.nan_draft_rids:
+            return None
+        mask = np.zeros((len(rows),), bool)
+        for slot, req in enumerate(rows):
+            if (
+                req is not None
+                and req.rid in self.cfg.nan_draft_rids
+                and req.rid not in self._draft_poisoned
+            ):
+                self._draft_poisoned.add(req.rid)
+                mask[slot] = True
+                self.draft_nan_poisons += 1
         return mask if mask.any() else None
 
     # ------------------------------------------------------ page scribbles

@@ -224,6 +224,34 @@ class PageAllocator:
         self.cow_count += 1
         return src, dst
 
+    def truncate_to(self, rid, n_tokens: int) -> List[int]:
+        """Roll back ``rid``'s table to the pages backing its first
+        ``n_tokens`` logical slots, dropping this table's reference on
+        every trailing page (speculative-decode rejection rollback —
+        docs/serving.md "Speculative decoding").
+
+        Returns the page ids whose reference was dropped, in table
+        order.  Dropped pages follow the normal last-free discipline:
+        refcount-zero pages return to the free list *dirty* and are
+        scrubbed before their next owner's first write; shared pages
+        (prefix-cache holds, other adopters) merely lose one reference
+        and stay live — so a rolled-back page published to the
+        :class:`PrefixCache` remains re-adoptable.  Stale slot positions
+        *within* the kept trailing page need no maintenance: they are
+        causally masked (``k_pos <= q_pos``) until the owner's next
+        write deterministically overwrites them, exactly like the fused
+        decode loop's stop-token rewind (serve/scheduler.py)."""
+        if n_tokens < 0:
+            raise ValueError(f"negative truncation point {n_tokens}")
+        table = self._tables[rid]
+        keep = pages_for(n_tokens, self.page_size)
+        dropped = table[keep:]
+        del table[keep:]
+        # drop in reverse so freshly freed low ids are handed out first
+        for p in reversed(dropped):
+            self._decref(p)
+        return dropped
+
     def free(self, rid) -> None:
         """Drop every page reference of ``rid``; pages whose refcount
         reaches zero return to the pool (and become dirty)."""

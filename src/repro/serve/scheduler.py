@@ -993,3 +993,77 @@ class Scheduler:
                 self._finish(slot, req, FINISH_STOP)
             elif len(req.out) >= req.max_new_tokens:
                 self._finish(slot, req, FINISH_LENGTH)
+
+    def commit_spec(
+        self,
+        run: DecodeRun,
+        kept: np.ndarray,
+        sampled: np.ndarray,
+        bad_rows: Optional[np.ndarray] = None,
+    ) -> None:
+        """Apply a speculative draft-then-verify round for a fused decode
+        plan (docs/serving.md "Speculative decoding").
+
+        ``sampled[slot, :k]`` holds the TARGET's verified tokens for the
+        run's window; ``kept[slot]`` is the engine's acceptance count —
+        how many of them are byte-identical to solo decode (>= 1 for
+        healthy rows, possibly 0/partial for faulted ones).  Unlike
+        ``commit_run``'s whole-batch stop rewind, truncation here is
+        PER ROW: acceptance already varies row-by-row, and the explicit
+        page rollback below makes any per-row cut safe.
+
+        * **Stop tokens** — a stop sampled inside the kept prefix
+          truncates that row to it (recorded, ``"stop"``), exactly the
+          fused-run rewind semantics; a fault after the stop is moot.
+        * **Quarantine** (``bad_rows``) — non-finite draft or target
+          logits: the row keeps its ``kept`` pre-fault tokens and
+          finishes ``numerical_error``; co-batched rows are untouched.
+        * **Rollback** — every surviving row's page table is truncated
+          to its committed length (``PageAllocator.truncate_to``): whole
+          pages backing only the rejected suffix return to the pool
+          (re-growable later, so the lifetime-commit accounting is
+          re-charged), and stale in-page KV past the cut is causally
+          masked until deterministically overwritten — the same argument
+          that makes the stop rewind byte-exact.
+        * **Clock** — advances by the largest per-row keep (>= 1), never
+          more than the planner's event-horizon bound ``n_steps``, so
+          admission/deadline timing stays within the planned window.
+        """
+        advance = 1
+        for slot, req in enumerate(run.rows):
+            if req is None:
+                continue
+            n_keep = int(kept[slot])
+            bad = bad_rows is not None and bool(bad_rows[slot])
+            stopped = False
+            if req.stop_tokens:
+                for j in range(n_keep):
+                    if int(sampled[slot, j]) in req.stop_tokens:
+                        n_keep = j + 1
+                        stopped = True
+                        bad = False  # fault landed after the stop
+                        break
+            req.computed += n_keep
+            req.out.extend(int(x) for x in sampled[slot, :n_keep])
+            advance = max(advance, n_keep)
+            if bad:
+                self._quarantine(slot, req)
+                continue
+            self._register_prefix(req)
+            if stopped:
+                self._finish(slot, req, FINISH_STOP)
+                continue
+            if len(req.out) >= req.max_new_tokens:
+                self._finish(slot, req, FINISH_LENGTH)
+                continue
+            # row survives: roll rejected-suffix pages back to the pool
+            dropped = self.allocator.truncate_to(req.rid, req.computed)
+            if dropped:
+                # the freed pages will be re-grown if the row runs on;
+                # re-charge them against the lifetime reservation (the
+                # free pool grew by exactly as much, so the in-flight
+                # growth guarantee is unchanged)
+                self._committed += len(dropped)
+                req.committed += len(dropped)
+                self._table_stale[slot] = True
+        self.iteration += advance

@@ -23,7 +23,7 @@ import pytest
 from repro import configs
 from repro.models import lm
 from repro.serve import faults
-from repro.serve.engine import Engine, RequestResult, ServeConfig
+from repro.serve.engine import Engine, RequestResult, ServeConfig, SpecConfig
 from repro.serve.scheduler import (
     FINISH_CANCELLED,
     FINISH_DEADLINE,
@@ -358,6 +358,84 @@ def test_scrub_scribbles_are_invisible():
         np.testing.assert_array_equal(r.tokens, want)
 
 
+# ------------------------------------------- faults under spec decoding
+
+
+def test_alloc_fault_mid_draft_preempts_only_victim():
+    """An injected allocator failure while growing pages for a
+    speculative run preempts the victim request only; everything still
+    finishes byte-identical to the solo stepped reference (the spec
+    engine's preempt-and-recompute replays through draft+verify)."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    eng = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(), prefill_mode="continuous", max_seq=48,
+        page_size=4, max_batch=3, prefill_chunk=4,
+    ))
+    eng.set_faults(faults.FaultConfig(seed=7, alloc_fail_p=0.2))
+    res = eng.serve_requests(prompts, 8)
+    health = eng.health()
+    assert health["injected_alloc_faults"] > 0, "fault never fired"
+    assert health["preemptions_fault"] == health["injected_alloc_faults"]
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for r, want in zip(res, ref):
+        np.testing.assert_array_equal(r.tokens, want)
+
+
+def test_nan_draft_quarantines_only_afflicted_row():
+    """Non-finite DRAFT logits (injected via the draft watchdog verdict)
+    quarantine exactly the afflicted request — zero tokens kept from the
+    poisoned round — while co-batched healthy rows stay byte-identical
+    to a fault-free run."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    skw = dict(
+        spec=SpecConfig(), prefill_mode="continuous", max_seq=48,
+        page_size=8, max_batch=3, prefill_chunk=4, decode_block=8,
+    )
+    eng = Engine(params, cfg, ServeConfig(**skw))
+    victim_rid = eng._rid + 2  # second request of the upcoming call
+    eng.set_faults(faults.FaultConfig(seed=0, nan_draft_rids=(victim_rid,)))
+    res = eng.serve_requests(prompts, 8)
+    assert res[1].finish_reason == FINISH_NUMERICAL
+    assert res[0].finish_reason == res[2].finish_reason == FINISH_LENGTH
+    health = eng.health()
+    assert health["injected_draft_nan_poisons"] == 1
+    assert health["quarantines"] == 1
+    ref = _stepped_reference(params, cfg, prompts, 8)
+    for i in (0, 2):
+        np.testing.assert_array_equal(
+            res[i].tokens, ref[i],
+            err_msg=f"healthy request {i} disturbed by draft quarantine",
+        )
+
+
+def test_preempt_during_spec_run_replays_byte_identical():
+    """Aging preemption while speculative runs are in flight: the victim
+    re-queues mid-window, replays its fed stream through draft+verify,
+    and finishes byte-identical to its uninterrupted solo run."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12, 7), seed=5)
+    eng, res = _overload_serve(
+        params, cfg, prompts, 10,
+        max_seq=24, page_size=4, max_batch=3, max_pages=13,
+        preempt_after=2, spec=SpecConfig(),
+    )
+    assert all(r.finish_reason == FINISH_LENGTH for r in res)
+    assert eng.health()["preemptions"] > 0, "pool never forced a preempt"
+    assert eng.spec_stats()["spec_runs"] > 0, "speculation never ran"
+    ref = _stepped_reference(params, cfg, prompts, 10)
+    for i, (r, want) in enumerate(zip(res, ref)):
+        np.testing.assert_array_equal(
+            r.tokens, want,
+            err_msg=f"request {i} diverged after preempt during spec run",
+        )
+
+
 # ------------------------------------------------------------- chaos fuzz
 
 
@@ -404,6 +482,34 @@ def test_chaos_fuzz_zero_exceptions_healthy_rows_exact():
             + h["injected_scribbles"]
         )
     assert total_faults > 0, "chaos fuzz never injected anything"
+    # the same storm over a SPEC-ENABLED engine: draft+verify rounds,
+    # rejection rollback, and draft-NaN quarantine under allocator
+    # failures and scribbles — healthy rows still byte-exact
+    seng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **skw))
+    spec_faults = 0
+    for seed in range(50):
+        victim = seng._rid + 1 + (seed % len(prompts))
+        seng.set_faults(faults.FaultConfig(
+            seed=seed, alloc_fail_p=0.05, scrub_corrupt_p=0.1,
+            nan_draft_rids=(victim,),
+        ))
+        res = seng.serve_requests(prompts, n_tok)  # must never raise
+        for i, r in enumerate(res):
+            assert r.finish_reason in (FINISH_LENGTH, FINISH_NUMERICAL), (
+                f"spec seed {seed} request {i}: {r.finish_reason}"
+            )
+            if r.finish_reason == FINISH_LENGTH:
+                np.testing.assert_array_equal(
+                    r.tokens, ref[i],
+                    err_msg=f"spec seed {seed}: healthy request {i} corrupted",
+                )
+        h = seng.health()
+        spec_faults = (
+            h["injected_alloc_faults"] + h["injected_draft_nan_poisons"]
+            + h["injected_scribbles"]
+        )
+    assert spec_faults > 0, "spec chaos never injected anything"
+    assert seng.health()["injected_draft_nan_poisons"] > 0
     # the forced fused failure rides on a fused-path engine once
     fcfg = small_cfg(sparsity=dataclasses.replace(
         configs.get_config("granite_3_8b", smoke=True).sparsity,

@@ -137,6 +137,49 @@ def test_cow_out_of_pages_has_no_side_effects():
     assert a.refcount(1) == 2
 
 
+def test_truncate_to_drops_trailing_pages():
+    a = PageAllocator(6, 4)
+    a.alloc("r0")
+    assert a.ensure("r0", 11) == [1, 2, 3]
+    # cut mid page 2: page 3 is purely rejected suffix, pages 1-2 stay
+    assert a.truncate_to("r0", 6) == [3]
+    assert a.page_table("r0") == (1, 2)
+    assert a.refcount(3) == 0 and a.dirty_pages() == {3}
+    # no-op cuts: already short enough / exact page boundary
+    assert a.truncate_to("r0", 8) == []
+    assert a.truncate_to("r0", 6) == []
+    assert a.page_table("r0") == (1, 2)
+    # dropped pages report in table order; freed low ids are handed out
+    # first again (reverse-order decref)
+    assert a.truncate_to("r0", 0) == [1, 2]
+    assert a.ensure("r0", 1) == [1]
+    with pytest.raises(ValueError, match="negative"):
+        a.truncate_to("r0", -1)
+
+
+def test_truncate_to_keeps_shared_and_held_pages_live():
+    """Rollback drops only THIS table's reference: pages shared with
+    another request or held by the prefix cache survive, and a held
+    rolled-back page is still adoptable afterwards (the spec-decode /
+    prefix-cache interaction)."""
+    a = PageAllocator(6, 4)
+    a.alloc("r0")
+    a.ensure("r0", 12)  # pages 1, 2, 3
+    a.alloc("r1")
+    a.adopt("r1", [1, 2])
+    a.hold(3)  # prefix-cache style hold on the suffix page
+    assert a.truncate_to("r0", 0) == [1, 2, 3]
+    assert a.refcount(1) == 1 and a.refcount(2) == 1  # r1's references
+    assert a.refcount(3) == 1  # the hold
+    assert a.dirty_pages() == set()  # nothing actually freed
+    a.alloc("r2")
+    a.adopt("r2", [3])  # rolled-back held page re-adopted
+    assert a.refcount(3) == 2
+    a.unhold(3)
+    a.free("r2")
+    assert a.refcount(3) == 0 and 3 in a.dirty_pages()
+
+
 def test_scrub_bookkeeping_roundtrip():
     a = PageAllocator(4, 2)
     a.alloc("r0")
@@ -195,8 +238,8 @@ def _run_schedule(n_pages, page_size, ops):
     after every op.
 
     ops: list of (kind, arg) with kind in {"new", "append", "free",
-    "share", "hold", "unhold", "preempt", "readopt"}; ``arg`` selects
-    targets (modulo counts).
+    "share", "hold", "unhold", "preempt", "readopt", "truncate"};
+    ``arg`` selects targets (modulo counts).
     ``share`` forks a new request off an existing one's full-page prefix
     (adoption); an odd ``arg`` truncates the fork's logical stream by
     one token — mimicking the full-prefix-hit recompute — so its next
@@ -206,6 +249,11 @@ def _run_schedule(n_pages, page_size, ops):
     freed, and a later ``readopt`` re-admits a request that adopts those
     held pages and replays — the exact release/readopt interleaving the
     serving loop performs under pool pressure (serve/scheduler.py).
+    ``truncate`` models speculative-decode rejection rollback
+    (``truncate_to``): the stream is cut to an arbitrary earlier point
+    and the trailing pages drop this table's reference — shared/held
+    pages must stay live (and stay re-adoptable), sole-owner pages must
+    return to the pool dirty.
     """
     _PHYS.clear()
     a = PageAllocator(n_pages, page_size)
@@ -300,6 +348,18 @@ def _run_schedule(n_pages, page_size, ops):
             a.free(rid)
             del streams[rid]
             model_dirty.update(p for p in before if a.refcount(p) == 0)
+        elif kind == "truncate" and streams:
+            # speculative-rejection rollback at an arbitrary point
+            rid = sorted(streams)[arg % len(streams)]
+            stream = streams[rid]
+            n = (arg // 7) % (len(stream) + 1)
+            before = a.page_table(rid)
+            dropped = a.truncate_to(rid, n)
+            assert sorted(dropped) == sorted(
+                before[pages_for(n, page_size):]
+            ), "truncate_to dropped the wrong pages"
+            del stream[n:]
+            model_dirty.update(p for p in dropped if a.refcount(p) == 0)
         elif kind == "readopt" and cached:
             # readmission after preemption: adopt the still-held prefix
             # pages; odd arg replays one token short (the fed-stream
@@ -322,7 +382,8 @@ def _run_schedule(n_pages, page_size, ops):
 
 
 _OP_KINDS = ["new", "append", "append", "append", "free",
-             "share", "share", "hold", "unhold", "preempt", "readopt"]
+             "share", "share", "hold", "unhold", "preempt", "readopt",
+             "truncate", "truncate"]
 
 
 def _random_ops(rng, n_ops):

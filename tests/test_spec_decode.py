@@ -1,0 +1,307 @@
+"""Self-speculative decoding on the DBB density ladder.
+
+The exactness contract under test (docs/serving.md "Speculative
+decoding"): a draft model drawn from a cheaper rung of the target's own
+sparsity ladder — a tighter activation bound or the int8 wire — proposes
+up to ``decode_block - 1`` tokens per fused run over the TARGET's paged
+cache, one multi-token target step verifies the whole window, and the
+committed output is **byte-identical** to running the target alone.
+Acceptance is a pure argmax/sample comparison against the target's own
+position-keyed tokens, so speculation is a scheduling optimization, not
+an approximation: every test here asserts equality, never tolerance.
+
+Also covered: the acceptance rule as a pure function, k=1 degeneration
+to plain decode, the 3-trace compile budget, rejected-suffix page
+rollback (no leaks), and stop tokens sampled inside a draft window
+(satellite of the PR 8 fused-run stop rewind).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve.engine import Engine, ServeConfig, SpecConfig, spec_accept
+from repro.serve.scheduler import FINISH_LENGTH, FINISH_STOP
+
+
+def small_cfg(arch="granite_3_8b", **kw):
+    cfg = configs.get_config(arch, smoke=True)
+    over = dict(vocab=64, d_model=64, d_ff=128, n_layers=2, dtype="float32")
+    if arch == "qwen2_vl_72b":
+        over["d_model"] = 128
+    over.update(kw)
+    return dataclasses.replace(cfg, **over)
+
+
+def _prompts(vocab, b=2, s0=8, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, vocab, (b, s0)
+    ).astype(np.int32)
+
+
+def _mixed_prompts(vocab, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, (s,)).astype(np.int32) for s in lengths]
+
+
+def _base_kwargs(wire="native", kv="native", block=16, **kw):
+    out = dict(
+        prefill_mode="continuous", max_seq=48, page_size=8,
+        max_batch=2, prefill_chunk=4, decode_block=block, kv_dtype=kv,
+    )
+    if wire == "int8":
+        out.update(pack_weights=True, wire_dtype="int8")
+    out.update(kw)
+    return out
+
+
+# -------------------------------------------------------- acceptance rule
+
+
+def test_spec_accept_full_agreement_keeps_whole_window():
+    draft = np.array([7, 3, 9], np.int32)  # d_1..d_3
+    target = np.array([7, 3, 9, 5], np.int32)  # g_1..g_4
+    assert spec_accept(draft, target, 4) == 4
+
+
+def test_spec_accept_rejects_at_first_divergence():
+    # d_2 != g_2: keep g_1 (matched d_1's predecessor) and g_2 itself —
+    # the target token at the divergent index is correct output
+    draft = np.array([7, 8, 9], np.int32)
+    target = np.array([7, 3, 9, 5], np.int32)
+    assert spec_accept(draft, target, 4) == 2
+    # immediate divergence: only the bonus token survives
+    assert spec_accept(np.array([1, 2, 3]), target, 4) == 1
+
+
+def test_spec_accept_k1_degenerates_to_plain_decode():
+    assert spec_accept(np.zeros((0,), np.int32), np.array([5]), 1) == 1
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(draft="fp4")
+    with pytest.raises(ValueError):
+        SpecConfig(draft_nnz=0)
+    with pytest.raises(ValueError):
+        ServeConfig(spec=SpecConfig(), prefill_mode="batched")
+    # int8_wire draft needs a packable sparsity mode on the target
+    cfg = small_cfg(sparsity=dataclasses.replace(
+        configs.get_config("granite_3_8b", smoke=True).sparsity,
+        mode="dense",
+    ))
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="int8_wire"):
+        Engine(params, cfg, ServeConfig(
+            spec=SpecConfig(draft="int8_wire"), **_base_kwargs()
+        ))
+    # draft_nnz beyond the model's block size is caught at build time
+    with pytest.raises(ValueError, match="a_nnz"):
+        Engine(params, small_cfg(), ServeConfig(
+            spec=SpecConfig(draft_nnz=99), **_base_kwargs()
+        ))
+
+
+# ------------------------------------------------------- exactness matrix
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "minicpm3_4b"])
+@pytest.mark.parametrize("wire", ["native", "int8"])
+@pytest.mark.parametrize("kv", ["native", "int8"])
+def test_spec_output_byte_identical(arch, wire, kv):
+    """Both draft kinds, GQA and MLA, native/int8 wire, f32/int8 KV:
+    speculative output == plain continuous output, byte for byte, under
+    seeded non-greedy sampling (the verify pass samples with the same
+    position-keyed PRNG solo decode uses)."""
+    cfg = small_cfg(arch)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=8, seed=0)
+    base = _base_kwargs(wire, kv, temperature=0.7, top_k=8, seed=3)
+    ref = Engine(params, cfg, ServeConfig(**base)).generate(prompts, 10)
+    for draft in ("nnz", "int8_wire"):
+        eng = Engine(params, cfg, ServeConfig(
+            spec=SpecConfig(draft=draft, draft_nnz=2), **base
+        ))
+        out = eng.generate(prompts, 10)
+        np.testing.assert_array_equal(
+            out, ref, err_msg=f"{arch}/{wire}/{kv}/draft={draft} diverged"
+        )
+        stats = eng.spec_stats()
+        assert stats["spec_runs"] > 0
+        assert stats["proposed"] > 0
+
+
+def test_spec_mixed_lengths_and_arrivals_byte_identical():
+    """Speculation under the full continuous machinery — mixed prompt
+    lengths, staggered arrivals, chunked prefill interleaved with
+    in-flight spec runs — still matches the plain engine exactly."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3)
+    kw = dict(_base_kwargs(), max_batch=3)
+    arrivals = [0, 2, 5]
+    ref = Engine(params, cfg, ServeConfig(**kw)).generate_requests(
+        prompts, 10, arrivals=arrivals
+    )
+    eng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **kw))
+    out = eng.generate_requests(prompts, 10, arrivals=arrivals)
+    for i, (a, b) in enumerate(zip(out, ref)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+def test_spec_identical_draft_accepts_everything():
+    """When the draft IS the target (int8-wire target + int8_wire draft)
+    every greedy proposal must verify: acceptance_rate == 1.0.  This
+    pins the indexing of the acceptance rule — any off-by-one between
+    draft proposals and verify positions would show up here."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=8, seed=0)
+    eng = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(draft="int8_wire"), **_base_kwargs(wire="int8")
+    ))
+    eng.generate(prompts, 12)
+    stats = eng.spec_stats()
+    assert stats["proposed"] > 0
+    assert stats["acceptance_rate"] == 1.0
+
+
+# ------------------------------------------------- degeneracy and budgets
+
+
+def test_spec_k1_matches_plain_and_proposes_nothing():
+    """decode_block=1 leaves no room for proposals: the draft dispatch
+    still runs (page maintenance), verification is a single-token target
+    step — plain decode in spec clothing, byte-identical output."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=8, seed=0)
+    base = _base_kwargs(block=1)
+    ref = Engine(params, cfg, ServeConfig(**base)).generate(prompts, 8)
+    eng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **base))
+    out = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(out, ref)
+    stats = eng.spec_stats()
+    assert stats["spec_runs"] > 0
+    assert stats["proposed"] == 0
+    assert stats["emitted"] > 0
+
+
+def test_spec_trace_budget_is_three():
+    """A spec engine compiles exactly 3 continuous traces — mixed step +
+    draft loop + verify step (`_decode_run` is never dispatched) —
+    regardless of batch composition or acceptance pattern."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(), **dict(_base_kwargs(), max_batch=3)
+    ))
+    eng.generate_requests(
+        _mixed_prompts(cfg.vocab, (9, 5, 12), seed=3), 10,
+        arrivals=[0, 2, 4],
+    )
+    assert eng.paged_compiles == 3
+    assert eng.decode_run_calls > 0
+
+
+def test_spec_rollback_leaks_no_pages():
+    """Rejected-suffix rollback returns whole pages to the pool: after
+    every request finishes, the allocator is fully free again (no page
+    leaked by truncate_to, none double-freed)."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=8, seed=0)
+    # page_size=2 with a low-acceptance draft: spec runs overshoot page
+    # boundaries constantly, so truncate_to really drops pages
+    eng = Engine(params, cfg, ServeConfig(
+        spec=SpecConfig(draft="nnz", draft_nnz=2),
+        **dict(_base_kwargs(), page_size=2, prefix_cache=False),
+    ))
+    eng.generate(prompts, 12)
+    alloc = eng._cont["allocator"]
+    assert alloc.n_free == eng.scfg.total_pages - 1  # all but null page
+
+
+# ------------------------------------- stop tokens inside a draft window
+
+
+@pytest.mark.parametrize("block", [1, 16])
+def test_spec_stop_inside_window_truncates_exactly(block):
+    """A stop token accepted mid-window ends the request AT the stop —
+    recorded in the output, nothing after it — with bytes and finish
+    reasons identical to the plain engine under the same stop set
+    (the per-row analogue of the PR 8 whole-batch fused-run rewind)."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=8, seed=0)
+    base = _base_kwargs(block=block)
+    # pick stops from the plain run's own output so one fires mid-stream
+    plain = Engine(params, cfg, ServeConfig(**base)).generate(prompts, 12)
+    stops = [int(plain[0][-9]), int(plain[1][-7])]
+    ref_eng = Engine(params, cfg, ServeConfig(**base))
+    ref = ref_eng.serve_requests(list(prompts), 12, stop_tokens=[stops] * 2)
+    eng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **base))
+    res = eng.serve_requests(list(prompts), 12, stop_tokens=[stops] * 2)
+    assert [r.finish_reason for r in res] == [
+        r.finish_reason for r in ref
+    ]
+    assert any(r.finish_reason == FINISH_STOP for r in res)
+    for i, (a, b) in enumerate(zip(res, ref)):
+        np.testing.assert_array_equal(
+            a.tokens, b.tokens, err_msg=f"request {i} stop truncation"
+        )
+        if a.finish_reason == FINISH_STOP:
+            assert int(a.tokens[-1]) in stops
+            assert not any(int(t) in stops for t in a.tokens[len(prompts[i]):-1])
+
+
+def test_spec_per_row_stop_frees_row_for_admission():
+    """One row stopping inside a spec window must not drag its co-batched
+    neighbor down with it: the neighbor runs to length, and a queued
+    request admits into the freed row — outcomes identical to plain."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (8, 8, 8), seed=9)
+    base = dict(_base_kwargs(), max_batch=2)
+    plain = Engine(params, cfg, ServeConfig(**base)).generate_requests(
+        prompts, 12
+    )
+    # stop request 0 a few tokens in; requests 1 and 2 run unhindered
+    stops = [[int(plain[0][len(prompts[0]) + 3])], [], []]
+    ref = Engine(params, cfg, ServeConfig(**base)).serve_requests(
+        prompts, 12, stop_tokens=stops
+    )
+    eng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **base))
+    res = eng.serve_requests(prompts, 12, stop_tokens=stops)
+    assert res[0].finish_reason == FINISH_STOP
+    assert res[1].finish_reason == res[2].finish_reason == FINISH_LENGTH
+    for i, (a, b) in enumerate(zip(res, ref)):
+        assert a.finish_reason == b.finish_reason, f"request {i}"
+        np.testing.assert_array_equal(a.tokens, b.tokens, err_msg=f"request {i}")
+
+
+# --------------------------------------------------- prefix-cache interop
+
+
+def test_spec_verified_pages_adoptable_by_prefix_cache():
+    """Prompt pages computed by a spec-enabled engine are published to
+    the prefix cache like any others; a second call adopts them (prefill
+    skipped) and still matches the plain engine byte-for-byte."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab, b=2, s0=16, seed=0)
+    base = _base_kwargs()
+    ref_eng = Engine(params, cfg, ServeConfig(**base))
+    ref1 = ref_eng.generate(prompts, 10)
+    ref2 = ref_eng.generate(prompts, 10)
+    eng = Engine(params, cfg, ServeConfig(spec=SpecConfig(), **base))
+    out1 = eng.generate(prompts, 10)
+    out2 = eng.generate(prompts, 10)
+    np.testing.assert_array_equal(out1, ref1)
+    np.testing.assert_array_equal(out2, ref2)
+    stats = eng.prefix_stats()
+    assert stats["page_hits"] > 0, "second call never adopted prompt pages"
