@@ -71,6 +71,12 @@ TRACKED_RATIOS = (
     # draft/verify-divergence bug is the only thing that can move it
     # (near-zero tolerance, like the byte ratios)
     "acceptance_rate",
+    # durability: on-disk bytes of an f32-KV engine snapshot / the int8-KV
+    # engine snapshot of the same serving state (serve_bench.bench_snapshot)
+    # — every leaf shape/dtype is fixed, so the ratio is an exact function
+    # of the snapshot wire format and gates at the tight byte-ratio
+    # tolerance (int8 KV must keep shrinking checkpoints too)
+    "snapshot_bytes_ratio",
 )
 # byte ratios are exact functions of the wire format (no timing noise):
 # any drop beyond rounding is a real compression regression, so they get
@@ -80,7 +86,11 @@ TRACKED_RATIOS = (
 RATIO_TOL = 0.01
 RATIO_TOLS = {
     "continuous_vs_oneshot_throughput": 0.15,
-    "sampled_vs_greedy_throughput": 0.15,
+    # divides two engines' wall times on a short workload; observed
+    # cross-session spread is ~1.05 vs ~0.88 on the same idle host, so
+    # 15% flaked.  The gate exists to catch a fall back to per-token
+    # dispatch (~0.4), which still trips a 25% budget easily.
+    "sampled_vs_greedy_throughput": 0.25,
     # spec decode times TWO engines' short workloads, so run-to-run
     # noise is roughly double the other throughput ratios (observed
     # ~0.67-1.1 on one idle host); the gate exists to catch pathological

@@ -5,12 +5,15 @@ Design (multi-host ready, filesystem-based — no external deps):
 * Each save writes leaves as ``.npy`` files under ``step_<N>.tmp/`` then
   atomically renames to ``step_<N>/`` — a crash mid-save never corrupts
   the latest checkpoint (restore only ever sees fully renamed dirs).
+  Stale ``.tmp`` dirs left behind by a crashed saver are ignored by
+  restore and swept by the next successful ``save``.
 * ``MANIFEST.json`` records the pytree structure, leaf dtypes/shapes, the
   mesh axis layout it was saved under, and the data-pipeline step, so a
   restart resumes bit-exact (pipeline ``seek``) on a *different* mesh:
   restore returns host arrays that the launcher ``device_put``s with the
   *new* sharding (elastic rescale: 256 -> 512 chips or back).
-* keep-k garbage collection, preferring to retain milestone steps.
+* keep-k garbage collection, preferring to retain milestone steps
+  (``milestone_every``: steps divisible by it survive the keep window).
 """
 
 from __future__ import annotations
@@ -23,17 +26,49 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint is structurally incompatible with the restore target.
+
+    Raised (never a bare ``assert`` — must survive ``python -O``) when the
+    manifest leaf count, a leaf shape, or a leaf file on disk disagrees
+    with the ``like_tree`` the caller is restoring into.
+    """
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
 
 
-def save(ckpt_dir: str, step: int, tree, extra: dict | None = None, keep: int = 3):
+def _sweep_stale_tmp(ckpt_dir: str) -> int:
+    """Remove ``step_*.tmp`` dirs left behind by a crashed saver."""
+    n = 0
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            n += 1
+    return n
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    tree,
+    extra: dict | None = None,
+    keep: int = 3,
+    milestone_every: int | None = None,
+    pre_publish_hook=None,
+):
+    """Atomically publish ``tree`` (+ JSON-able ``extra``) as ``step_<N>/``.
+
+    ``pre_publish_hook`` runs after the tmp dir is fully written but before
+    the atomic rename — the fault-injection seam for crash-mid-save tests
+    (a hook that raises leaves a ``.tmp`` dir that restore ignores).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
+    _sweep_stale_tmp(ckpt_dir)
     tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
     os.makedirs(tmp)
     leaves, treedef = _flatten(tree)
     manifest = {
@@ -51,16 +86,20 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None, keep: int = 
         )
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump(manifest, f)
+    if pre_publish_hook is not None:
+        pre_publish_hook()
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)  # atomic publish
-    _gc(ckpt_dir, keep)
+    _gc(ckpt_dir, keep, milestone_every)
     return final
 
 
-def _gc(ckpt_dir: str, keep: int):
+def _gc(ckpt_dir: str, keep: int, milestone_every: int | None = None):
     steps = sorted(all_steps(ckpt_dir))
-    for s in steps[:-keep]:
+    for s in steps[:-keep] if keep > 0 else steps:
+        if milestone_every and s % milestone_every == 0:
+            continue  # milestones outlive the keep window
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
 
 
@@ -82,11 +121,27 @@ def latest_step(ckpt_dir: str):
     return steps[-1] if steps else None
 
 
+def load_manifest(ckpt_dir: str, step: int | None = None) -> dict:
+    """Read a published step's MANIFEST.json without touching the leaves.
+
+    Lets a restorer recover saved config (``extra``) *before* it can build
+    the ``like_tree`` that full ``restore`` needs.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "MANIFEST.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, like_tree, step: int | None = None):
     """Restore into the *structure* of ``like_tree`` (host numpy leaves).
 
     Returns (tree, manifest).  The caller re-shards via ``device_put`` with
-    whatever mesh is current — elastic restore across mesh sizes.
+    whatever mesh is current — elastic restore across mesh sizes.  Any
+    structural disagreement raises :class:`CheckpointError` loudly.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -96,14 +151,25 @@ def restore(ckpt_dir: str, like_tree, step: int | None = None):
     with open(os.path.join(path, "MANIFEST.json")) as f:
         manifest = json.load(f)
     leaves, treedef = _flatten(like_tree)
-    assert len(leaves) == manifest["n_leaves"], (
-        f"checkpoint has {manifest['n_leaves']} leaves, "
-        f"model expects {len(leaves)} — architecture mismatch"
-    )
+    if len(leaves) != manifest["n_leaves"]:
+        raise CheckpointError(
+            f"checkpoint step {step} has {manifest['n_leaves']} leaves, "
+            f"restore target expects {len(leaves)} — architecture mismatch"
+        )
     new_leaves = []
     for i, like in enumerate(leaves):
-        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
-        want = tuple(np.shape(like))
-        assert tuple(arr.shape) == want, (i, arr.shape, want)
+        leaf_path = os.path.join(path, f"leaf_{i:05d}.npy")
+        if not os.path.exists(leaf_path):
+            raise CheckpointError(
+                f"checkpoint step {step} is missing leaf file {leaf_path}"
+            )
+        arr = np.load(leaf_path)
+        shape = getattr(like, "shape", None)  # ShapeDtypeStruct-friendly
+        want = tuple(np.shape(like) if shape is None else shape)
+        if tuple(arr.shape) != want:
+            raise CheckpointError(
+                f"leaf {i} of step {step}: saved shape {tuple(arr.shape)} "
+                f"!= expected {want}"
+            )
         new_leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest

@@ -254,6 +254,40 @@ def cache_specs(cfg):
     return out
 
 
+# ------------------------------------------- cache state export (durability)
+#
+# The serving engine's crash-consistency snapshots (serve/engine.py) go
+# through these three hooks so the KV-plane wire format stays a model-layer
+# concern: what a snapshot stores is exactly the device layout — int8 KV
+# caches checkpoint at wire size (the S2TA bytes-economy argument applied
+# to recovery traffic), and nothing is re-quantized on either side.
+
+
+def paged_cache_template(cfg, n_pages: int, page_size: int):
+    """Abstract (shape/dtype only) paged-cache pytree for ``cfg`` — the
+    ``like_tree`` a restorer hands to ``checkpoint.manager.restore``
+    without allocating device memory."""
+    from repro.serve.paged_cache import make_paged_cache
+
+    return jax.eval_shape(lambda: make_paged_cache(cfg, n_pages, page_size))
+
+
+def export_decode_state(cache):
+    """Device cache pytree -> host numpy pytree, dtype-preserving (int8
+    planes stay int8 on disk)."""
+    import numpy as np
+
+    return jax.tree_util.tree_map(
+        lambda leaf: np.asarray(jax.device_get(leaf)), cache
+    )
+
+
+def restore_decode_state(host_cache):
+    """Host numpy pytree -> device pytree (inverse of
+    :func:`export_decode_state`)."""
+    return jax.tree_util.tree_map(jnp.asarray, host_cache)
+
+
 def decode_step(params, cache, tokens: jax.Array, pos, cfg):
     """One decode step.  tokens [B, 1]; pos scalar int32 (current position).
 

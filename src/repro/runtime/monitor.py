@@ -30,6 +30,50 @@ class StepTimer:
         return statistics.median(self.times) if self.times else 0.0
 
 
+def percentile(samples, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) — 0.0 on empty input.
+
+    Deliberately dependency-free and deterministic so ``Engine.health()``
+    can surface step-time p50/p99 without numpy on the host path.
+    """
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+class HangWatchdog:
+    """Flags individual steps whose wall time exceeds ``threshold``× the
+    rolling median — the single-host analogue of :class:`StragglerDetector`
+    (there the unit is a host, here it is an iteration).  ``note(dt)``
+    returns True when ``dt`` is a straggler step; the caller decides what
+    to do (the serving engine bumps a ``health()`` counter and logs once).
+
+    Straggler samples still enter the window — a *persistently* slow phase
+    (e.g. a recompile storm) raises the median and stops re-flagging, so
+    the watchdog detects discontinuities, not steady load.
+    """
+
+    def __init__(self, threshold: float = 10.0, window: int = 20, min_samples: int = 5):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.times = collections.deque(maxlen=window)
+        self.trips = 0
+
+    def note(self, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
+            if med > 0 and dt > self.threshold * med:
+                slow = True
+                self.trips += 1
+        self.times.append(dt)
+        return slow
+
+
 class StragglerDetector:
     """Flags hosts whose rolling median step time exceeds the fleet median
     by ``threshold``x (default 1.5x, typical production setting)."""

@@ -39,6 +39,7 @@ drops the final state), and serving correctness beats speed there.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 from typing import Dict, List, Optional, Sequence
@@ -47,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import manager as checkpoint
 from repro.core import dbb
 from repro.core.sampling import (
     TOP_K_DISABLED,
@@ -55,6 +57,7 @@ from repro.core.sampling import (
     validate_sampling,
 )
 from repro.models import common, encdec, lm
+from repro.runtime import monitor
 from repro.serve import faults, paged_cache
 from repro.serve.scheduler import (
     FINISH_LENGTH,
@@ -216,6 +219,21 @@ class ServeConfig:
     # longest agreeing prefix plus one bonus token.  Output bytes are
     # identical to spec=None.  Requires prefill_mode="continuous".
     spec: Optional[SpecConfig] = None
+    # --- durability (docs/serving.md "Durability") ---
+    # snapshot_every > 0 publishes a crash-consistent snapshot to
+    # snapshot_dir every N scheduler iterations (0 = manual snapshots
+    # only via Engine.snapshot()).  Sparse intervals are safe: replay
+    # re-derives all post-snapshot work byte-exactly, because sampling
+    # keys depend only on (seed, fed-stream position), never on wall
+    # clock or schedule.  snapshot_keep is the keep-k GC depth for
+    # published snapshots (checkpoint/manager.py).
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0
+    snapshot_keep: int = 3
+    # A serve-loop step slower than hang_threshold x the rolling median
+    # trips the hang watchdog (runtime/monitor.py): counted in
+    # health()["slow_steps"], logged once per engine.
+    hang_threshold: float = 10.0
 
     def __post_init__(self):
         validate_sampling(
@@ -261,6 +279,22 @@ class ServeConfig:
                 "speculative decoding requires prefill_mode='continuous', "
                 f"got {self.prefill_mode!r}"
             )
+        if self.snapshot_every < 0:
+            raise ValueError(
+                f"snapshot_every must be >= 0, got {self.snapshot_every}"
+            )
+        if self.snapshot_every and self.snapshot_dir is None:
+            raise ValueError(
+                "snapshot_every > 0 requires snapshot_dir"
+            )
+        if self.snapshot_keep < 1:
+            raise ValueError(
+                f"snapshot_keep must be >= 1, got {self.snapshot_keep}"
+            )
+        if self.hang_threshold <= 1.0:
+            raise ValueError(
+                f"hang_threshold must be > 1, got {self.hang_threshold}"
+            )
         if self.max_pages is not None:
             need = self.pages_per_request + 1
             if self.max_pages < need:
@@ -304,6 +338,15 @@ class RequestResult:
     (quarantined).  ``tokens`` is ``prompt ‖ generated`` (the prompt
     alone when nothing was generated), so callers never special-case
     failures to read output.
+
+    The latency fields are host wall-clock seconds from the scheduler's
+    ``time.monotonic`` stamps: ``queue_time`` is enqueue → first
+    admission, ``time_to_first_token`` is enqueue → first committed
+    output token, ``tokens_per_second`` is generated tokens over
+    enqueue → finish.  All are ``0.0`` when the event never happened
+    (e.g. a rejected request has no admission).  Monotonic stamps are
+    process-local, so results assembled after a cross-process
+    ``Engine.restore`` report latency relative to the restoring process.
     """
 
     rid: int
@@ -311,6 +354,10 @@ class RequestResult:
     n_generated: int
     finish_reason: str
     preemptions: int = 0  # times preempted-and-recomputed along the way
+    # --- latency (seconds; 0.0 when the event never happened) ---
+    queue_time: float = 0.0
+    time_to_first_token: float = 0.0
+    tokens_per_second: float = 0.0
 
     @property
     def ok(self) -> bool:
@@ -385,6 +432,10 @@ class Engine:
                 f"{scfg.pack_weights}, mode={cfg.sparsity.mode!r})"
             )
         raw_params = params  # pre-wire leaves (int8_wire draft packs these)
+        # Snapshots store only serving state, never weights —
+        # Engine.restore() re-packs from the same raw params the caller
+        # holds; keep them so restore paths can hand them around.
+        self._raw_params = raw_params
         if packing:
             params = pack_params_for_serving(params, cfg, scfg.wire_dtype)
         self.params = params
@@ -471,7 +522,18 @@ class Engine:
         # --- robustness state (docs/serving.md "Robustness") ---
         self._injector: Optional[faults.FaultInjector] = None
         self.fallbacks = 0  # fused paged_attn -> gather rebuilds
-        self._health: Dict[str, int] = {}  # scheduler stats, accumulated
+        self._health: Dict[str, float] = {}  # scheduler stats, accumulated
+        # --- durability / monitoring (docs/serving.md "Durability") ---
+        self._step_timer = monitor.StepTimer(window=32)
+        self._watchdog = monitor.HangWatchdog(threshold=scfg.hang_threshold)
+        self._step_samples: collections.deque = collections.deque(maxlen=2048)
+        self.slow_steps = 0  # watchdog trips (health()["slow_steps"])
+        self._slow_logged = False  # log the first trip only
+        self._snap_step = 0  # next snapshot's monotone step number
+        self._last_snap_iter: Optional[int] = None
+        # in-flight scheduler state loaded by load_snapshot(), consumed
+        # by resume(); while pending, _serve() refuses new work
+        self._resume_state: Optional[dict] = None
 
     def _build_jitted(self) -> None:
         """(Re)build every jitted entry point against ``self.cfg``.
@@ -629,13 +691,20 @@ class Engine:
                 else self._injector.alloc_hook
             )
 
-    def health(self) -> Dict[str, int]:
+    def health(self) -> Dict[str, float]:
         """Robustness counters accumulated across continuous-mode calls:
         preemptions, quarantines, per-reason finish counts, queue depth
-        high-water, fused->gather fallbacks, and (when fault injection is
-        armed) fired-fault counts.  Surfaced by serve_bench."""
+        high-water, fused->gather fallbacks, hang-watchdog trips plus
+        serve-step wall-time percentiles (µs, from the monitor's rolling
+        sample window), and (when fault injection is armed) fired-fault
+        counts.  Surfaced by serve_bench."""
         out = dict(self._health)
         out["fused_fallbacks"] = self.fallbacks
+        out["slow_steps"] = self.slow_steps
+        if self._step_samples:
+            xs = list(self._step_samples)
+            out["step_p50_us"] = round(monitor.percentile(xs, 50) * 1e6, 1)
+            out["step_p99_us"] = round(monitor.percentile(xs, 99) * 1e6, 1)
         if self._injector is not None:
             out["injected_alloc_faults"] = self._injector.alloc_faults
             out["injected_fused_faults"] = self._injector.fused_faults
@@ -644,7 +713,25 @@ class Engine:
                 self._injector.draft_nan_poisons
             )
             out["injected_scribbles"] = self._injector.scribbles
+            out["injected_kills"] = self._injector.kills
         return out
+
+    def _note_step_time(self, dt: float) -> None:
+        """Record one serve-loop step's wall time: feeds the health()
+        percentiles and the hang watchdog (a step slower than
+        ``hang_threshold`` x the rolling median bumps ``slow_steps``;
+        only the first trip logs, so a hung engine can't log-spam)."""
+        self._step_samples.append(dt)
+        if self._watchdog.note(dt):
+            self.slow_steps += 1
+            if not self._slow_logged:
+                self._slow_logged = True
+                logger.warning(
+                    "slow serving step: %.1f ms (> %gx rolling median); "
+                    "further trips counted in health()['slow_steps'] "
+                    "without logging",
+                    dt * 1e3, self.scfg.hang_threshold,
+                )
 
     def spec_stats(self) -> Dict[str, float]:
         """Speculative-decoding counters (zeros unless ``ServeConfig.spec``
@@ -880,6 +967,59 @@ class Engine:
             raise ValueError(f"{name} has {len(out)} entries for {n} prompts")
         return out
 
+    @staticmethod
+    def _stream_list(on_token, n: int) -> list:
+        """Normalize the ``on_token`` argument: None (no streaming), one
+        callable applied to every request, or a per-request sequence
+        (None entries = no streaming for that request)."""
+        if on_token is None:
+            return [None] * n
+        if callable(on_token):
+            return [on_token] * n
+        try:
+            out = list(on_token)
+        except TypeError:
+            raise ValueError(
+                "on_token must be None, a callable, or a per-request "
+                f"sequence of callables, got {type(on_token).__name__}"
+            ) from None
+        if len(out) != n:
+            raise ValueError(
+                f"on_token has {len(out)} entries for {n} prompts"
+            )
+        for i, cb in enumerate(out):
+            if cb is not None and not callable(cb):
+                raise ValueError(
+                    f"request {i}: on_token must be callable or None, "
+                    f"got {type(cb).__name__}"
+                )
+        return out
+
+    @staticmethod
+    def _result(req: Request) -> RequestResult:
+        """Assemble the typed result (tokens + latency) for one finished
+        request from its scheduler timing stamps."""
+        queue_time = (
+            max(0.0, req.t_admit - req.t_enqueue) if req.t_admit else 0.0
+        )
+        ttft = (
+            max(0.0, req.t_first - req.t_enqueue) if req.t_first else 0.0
+        )
+        span = (
+            max(0.0, req.t_finish - req.t_enqueue) if req.t_finish else 0.0
+        )
+        return RequestResult(
+            rid=req.rid, tokens=req.tokens(),
+            n_generated=len(req.out),
+            finish_reason=req.finish_reason or FINISH_LENGTH,
+            preemptions=req.preemptions,
+            queue_time=queue_time,
+            time_to_first_token=ttft,
+            tokens_per_second=(
+                len(req.out) / span if span > 0 and req.out else 0.0
+            ),
+        )
+
     def generate_requests(
         self,
         prompts: Sequence[np.ndarray],
@@ -887,6 +1027,7 @@ class Engine:
         arrivals: Optional[Sequence[int]] = None,
         sampling=None,
         stop_tokens=None,
+        on_token=None,
     ) -> List[np.ndarray]:
         """Continuous-batched generation over the paged KV cache.
 
@@ -921,12 +1062,24 @@ class Engine:
         sequence for every request, or a per-request sequence of id
         sequences — sampling any of them ends that request early (the
         stop token is included in its output).
+
+        ``on_token`` streams committed output incrementally: None, one
+        callable for every request, or a per-request sequence.  Each
+        callback fires as ``on_token(rid, tokens, start)`` — ``tokens``
+        a list of newly committed output ids, ``start`` their offset
+        into the request's output stream.  Only *committed* tokens are
+        ever delivered (post stop-truncation, post quarantine-rewind),
+        so the concatenated stream is byte-equal to the final output —
+        a preempted-and-recomputed request re-derives the same bytes and
+        streams only past what it already delivered (docs/serving.md
+        "Durability").
         """
         n = len(prompts)
         n_list = self._per_request("n_tokens", n_tokens, n, None)
         arr_list = self._per_request("arrivals", arrivals, n, 0)
         samp_list = self._sampling_list(sampling, n)
         stop_list = self._stop_list(stop_tokens, n)
+        cb_list = self._stream_list(on_token, n)
         clean = [
             self._validate_request(i, p, n_list[i])
             for i, p in enumerate(prompts)
@@ -936,6 +1089,7 @@ class Engine:
                 rid=self._next_rid(), prompt=p,
                 max_new_tokens=n_list[i], arrival=arr_list[i],
                 sampling=samp_list[i], stop_tokens=stop_list[i],
+                on_token=cb_list[i],
             )
             for i, p in enumerate(clean)
         ]
@@ -951,6 +1105,7 @@ class Engine:
         cancel_at: Optional[Sequence[Optional[int]]] = None,
         sampling=None,
         stop_tokens=None,
+        on_token=None,
     ) -> List[RequestResult]:
         """Robust continuous serving: every request gets a typed
         :class:`RequestResult`, never an engine exception.
@@ -962,7 +1117,11 @@ class Engine:
         iteration is reached finishes ``deadline_exceeded``/
         ``cancelled`` with whatever it generated so far.  Queue overflow
         under ``max_queue`` follows the ``backpressure`` policy
-        (docs/serving.md "Robustness")."""
+        (docs/serving.md "Robustness").
+
+        ``on_token`` streams committed output (see
+        :meth:`generate_requests`); results carry queue/TTFT/throughput
+        latency fields (see :class:`RequestResult`)."""
         scfg = self.scfg
         n = len(prompts)
         n_list = self._per_request("n_tokens", n_tokens, n, None)
@@ -971,6 +1130,7 @@ class Engine:
         cx_list = self._per_request("cancel_at", cancel_at, n, None)
         samp_list = self._sampling_list(sampling, n)
         stop_list = self._stop_list(stop_tokens, n)
+        cb_list = self._stream_list(on_token, n)
         slots: List[Optional[Request]] = []
         results: List[Optional[RequestResult]] = []
         for i, prompt in enumerate(prompts):
@@ -999,6 +1159,7 @@ class Engine:
                     max_new_tokens=n_list[i], arrival=arr_list[i],
                     deadline=dl_list[i], cancel_at=cx_list[i],
                     sampling=samp_list[i], stop_tokens=stop_list[i],
+                    on_token=cb_list[i],
                 )
             )
             results.append(None)
@@ -1006,12 +1167,7 @@ class Engine:
         for i, req in enumerate(slots):
             if req is None:
                 continue
-            results[i] = RequestResult(
-                rid=req.rid, tokens=req.tokens(),
-                n_generated=len(req.out),
-                finish_reason=req.finish_reason or FINISH_LENGTH,
-                preemptions=req.preemptions,
-            )
+            results[i] = self._result(req)
         return results
 
     def _dispatch_spec(self, plan: DecodeRun, cache, inj):
@@ -1117,11 +1273,9 @@ class Engine:
         self.fused_tokens += int(kept.sum())
         return kept, sampled, bad, cache
 
-    def _serve(self, reqs: Sequence[Request]) -> None:
-        """Run the continuous loop until every request in ``reqs`` has a
-        terminal outcome.  Dispatch errors from an injected fused-kernel
-        fault trigger the one-way gather fallback and a retry; per-row
-        numerical faults quarantine only their row."""
+    def _ensure_cont(self) -> dict:
+        """Build (once) and return the continuous-mode persistent state:
+        page allocator, prefix cache, device paged-KV cache."""
         scfg = self.scfg
         if self._cont is None:
             allocator = paged_cache.PageAllocator(
@@ -1139,8 +1293,14 @@ class Engine:
             }
             if self._injector is not None:
                 allocator.fault_hook = self._injector.alloc_hook
-        cont = self._cont
-        sched = Scheduler(
+        return self._cont
+
+    def _make_scheduler(self) -> Scheduler:
+        """A fresh scheduler over the persistent allocator/prefix cache
+        (one per ``_serve``/``resume`` call)."""
+        scfg = self.scfg
+        cont = self._ensure_cont()
+        return Scheduler(
             max_batch=scfg.max_batch,
             page_size=scfg.page_size,
             n_pages=scfg.total_pages,
@@ -1153,75 +1313,352 @@ class Engine:
             backpressure=scfg.backpressure,
             preempt_after=scfg.preempt_after,
         )
+
+    def _serve(self, reqs: Sequence[Request]) -> None:
+        """Run the continuous loop until every request in ``reqs`` has a
+        terminal outcome.  Dispatch errors from an injected fused-kernel
+        fault trigger the one-way gather fallback and a retry; per-row
+        numerical faults quarantine only their row."""
+        if self._resume_state is not None:
+            raise RuntimeError(
+                "engine holds restored in-flight requests: call resume() "
+                "to finish them before serving new work"
+            )
+        sched = self._make_scheduler()
         for req in reqs:
             sched.add(req)
+        self._run_loop(sched)
+
+    def _run_loop(self, sched: Scheduler) -> None:
+        """The continuous serving loop proper, shared by ``_serve`` and
+        ``resume``.
+
+        Durability hooks (docs/serving.md "Durability"): at every
+        iteration boundary — before ``plan()``, the only point where
+        device cache, allocator, scheduler, and request state are
+        mutually consistent — the loop publishes a snapshot when
+        ``snapshot_every`` is due, then visits the ``iteration`` kill
+        point; the ``pre_commit`` kill point sits between each jitted
+        dispatch and its scheduler commit (device KV advanced, host
+        bookkeeping not — the torn state snapshots must never see).
+        Each compute step is timed for the hang watchdog and the
+        ``health()`` percentiles."""
+        scfg = self.scfg
+        cont = self._ensure_cont()
         inj = self._injector
         cache = cont["cache"]
-        while sched.has_work():
-            if inj is not None:
-                page = inj.scribble_page(cont["allocator"].free_pages())
-                if page is not None:
-                    cache = self._scribble(cache, jnp.int32(page))
-            plan = sched.plan()
-            if plan is None:  # only future arrivals left: advance time
-                sched.tick()
-                continue
-            self.step_calls += 1
-            if isinstance(plan, DecodeRun):
-                self.decode_run_calls += 1
-                self._step_shapes.add(("run",))
-                if self._spec is not None:
-                    kept, sampled, bad, cache = self._dispatch_spec(
-                        plan, cache, inj
-                    )
-                    sched.commit_spec(plan, kept, sampled, bad_rows=bad)
+        # every serve/resume loop snapshots its first boundary, then
+        # every snapshot_every iterations of this scheduler
+        self._last_snap_iter = None
+        try:
+            while sched.has_work():
+                if scfg.snapshot_every and (
+                    self._last_snap_iter is None
+                    or sched.iteration - self._last_snap_iter
+                    >= scfg.snapshot_every
+                ):
+                    cont["cache"] = cache
+                    self._snapshot_now(sched)
+                    self._last_snap_iter = sched.iteration
+                if inj is not None:
+                    inj.maybe_kill("iteration")
+                    page = inj.scribble_page(cont["allocator"].free_pages())
+                    if page is not None:
+                        cache = self._scribble(cache, jnp.int32(page))
+                plan = sched.plan()
+                if plan is None:  # only future arrivals left: advance time
+                    sched.tick()
                     continue
-                self.fused_tokens += plan.n_steps
-                args = (
-                    self.params, cache,
-                    jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
-                    jnp.asarray(plan.page_tables),
-                    jnp.asarray(plan.scrub_pages),
-                    jnp.asarray(plan.cow_pages),
-                    jnp.asarray(plan.samp_temp), jnp.asarray(plan.samp_top_k),
-                    jnp.asarray(plan.samp_top_p), jnp.asarray(plan.samp_seed),
-                    jnp.int32(plan.n_steps),
-                )
-                try:
-                    with faults.scoped(inj):
-                        sampled, bad_at, cache = self._decode_run(*args)
-                except faults.FusedKernelFault as err:
-                    self._fallback_to_gather(err)
-                    with faults.scoped(inj):
-                        sampled, bad_at, cache = self._decode_run(*args)
-                sched.commit_run(
-                    plan, np.asarray(sampled), bad_at=np.asarray(bad_at)
-                )
-                continue
-            self._step_shapes.add(("step",) + plan.tokens.shape)
-            args = (
-                self.params, cache,
-                jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
-                jnp.asarray(plan.page_tables), jnp.asarray(plan.scrub_pages),
-                jnp.asarray(plan.cow_pages),
+                self.step_calls += 1
+                self._step_timer.start()
+                if isinstance(plan, DecodeRun):
+                    self.decode_run_calls += 1
+                    self._step_shapes.add(("run",))
+                    if self._spec is not None:
+                        kept, sampled, bad, cache = self._dispatch_spec(
+                            plan, cache, inj
+                        )
+                        if inj is not None:
+                            inj.maybe_kill("pre_commit")
+                        sched.commit_spec(plan, kept, sampled, bad_rows=bad)
+                    else:
+                        self.fused_tokens += plan.n_steps
+                        args = (
+                            self.params, cache,
+                            jnp.asarray(plan.tokens),
+                            jnp.asarray(plan.positions),
+                            jnp.asarray(plan.page_tables),
+                            jnp.asarray(plan.scrub_pages),
+                            jnp.asarray(plan.cow_pages),
+                            jnp.asarray(plan.samp_temp),
+                            jnp.asarray(plan.samp_top_k),
+                            jnp.asarray(plan.samp_top_p),
+                            jnp.asarray(plan.samp_seed),
+                            jnp.int32(plan.n_steps),
+                        )
+                        try:
+                            with faults.scoped(inj):
+                                sampled, bad_at, cache = self._decode_run(
+                                    *args
+                                )
+                        except faults.FusedKernelFault as err:
+                            self._fallback_to_gather(err)
+                            with faults.scoped(inj):
+                                sampled, bad_at, cache = self._decode_run(
+                                    *args
+                                )
+                        if inj is not None:
+                            inj.maybe_kill("pre_commit")
+                        sched.commit_run(
+                            plan, np.asarray(sampled),
+                            bad_at=np.asarray(bad_at),
+                        )
+                else:
+                    self._step_shapes.add(("step",) + plan.tokens.shape)
+                    args = (
+                        self.params, cache,
+                        jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
+                        jnp.asarray(plan.page_tables),
+                        jnp.asarray(plan.scrub_pages),
+                        jnp.asarray(plan.cow_pages),
+                    )
+                    try:
+                        with faults.scoped(inj):
+                            logits, cache = self._paged_step(*args)
+                    except faults.FusedKernelFault as err:
+                        self._fallback_to_gather(err)
+                        with faults.scoped(inj):
+                            logits, cache = self._paged_step(*args)
+                    if inj is not None:
+                        mask = inj.poison_mask(plan.rows, plan.sample_mask)
+                        if mask is not None:
+                            logits = self._poison(logits, jnp.asarray(mask))
+                    sampled, ok = self._sample_at(
+                        logits, jnp.asarray(plan.sample_idx),
+                        jnp.asarray(plan.positions),
+                        jnp.asarray(plan.samp_temp),
+                        jnp.asarray(plan.samp_top_k),
+                        jnp.asarray(plan.samp_top_p),
+                        jnp.asarray(plan.samp_seed),
+                    )
+                    if inj is not None:
+                        inj.maybe_kill("pre_commit")
+                    sched.commit(plan, np.asarray(sampled), ok=np.asarray(ok))
+                self._note_step_time(self._step_timer.stop())
+        finally:
+            # a SimulatedCrash abandons the loop mid-flight; the engine
+            # object is then dead by contract, so publishing the partial
+            # cache and stats here is harmless (and keeps the no-crash
+            # path identical to before)
+            cont["cache"] = cache
+            self._merge_health(sched.stats())
+
+    # ----------------------------------------------------------- durability
+
+    #: serve_config fields a snapshot does NOT pin: where/how often to
+    #: snapshot and the monitor threshold affect no output byte, so a
+    #: restorer may legally change them (e.g. restore into a new dir).
+    _SNAP_FREE_KNOBS = (
+        "snapshot_dir", "snapshot_every", "snapshot_keep", "hang_threshold",
+    )
+
+    @staticmethod
+    def _scfg_from_state(d: dict) -> ServeConfig:
+        """Rebuild a :class:`ServeConfig` from its JSON-roundtripped
+        ``dataclasses.asdict`` form (nested :class:`SpecConfig` included)."""
+        d = dict(d)
+        spec = d.pop("spec", None)
+        return ServeConfig(
+            spec=None if spec is None else SpecConfig(**spec), **d
+        )
+
+    def _snapshot_now(self, sched: Optional[Scheduler], ckpt_dir=None) -> str:
+        """Publish one crash-consistent snapshot (atomic tmp-rename via
+        checkpoint/manager.py).  ``sched`` is the live scheduler at an
+        iteration boundary, or None for an engine-level snapshot between
+        serve calls.  Returns the published directory."""
+        scfg = self.scfg
+        path = ckpt_dir or scfg.snapshot_dir
+        if path is None:
+            raise ValueError(
+                "no snapshot destination: set ServeConfig.snapshot_dir "
+                "or pass ckpt_dir"
             )
-            try:
-                with faults.scoped(inj):
-                    logits, cache = self._paged_step(*args)
-            except faults.FusedKernelFault as err:
-                self._fallback_to_gather(err)
-                with faults.scoped(inj):
-                    logits, cache = self._paged_step(*args)
-            if inj is not None:
-                mask = inj.poison_mask(plan.rows, plan.sample_mask)
-                if mask is not None:
-                    logits = self._poison(logits, jnp.asarray(mask))
-            sampled, ok = self._sample_at(
-                logits, jnp.asarray(plan.sample_idx),
-                jnp.asarray(plan.positions),
-                jnp.asarray(plan.samp_temp), jnp.asarray(plan.samp_top_k),
-                jnp.asarray(plan.samp_top_p), jnp.asarray(plan.samp_seed),
+        cont = self._ensure_cont()
+        extra = {
+            "snapshot_version": 1,
+            "kind": "engine_snapshot",
+            "serve_config": dataclasses.asdict(scfg),
+            "engine": {
+                "rid": self._rid,
+                "fallbacks": self.fallbacks,
+                "health": dict(self._health),
+            },
+            "allocator": cont["allocator"].export_state(),
+            "prefix": (
+                None if cont["prefix"] is None
+                else cont["prefix"].export_state()
+            ),
+            "scheduler": None if sched is None else sched.export_state(),
+        }
+        inj = self._injector
+        step = self._snap_step
+        self._snap_step += 1
+        return checkpoint.save(
+            path, step, lm.export_decode_state(cont["cache"]),
+            extra=extra, keep=scfg.snapshot_keep,
+            pre_publish_hook=(
+                None if inj is None
+                else (lambda: inj.maybe_kill("mid_save"))
+            ),
+        )
+
+    def snapshot(self, ckpt_dir: Optional[str] = None) -> str:
+        """Publish an engine-level snapshot of the persistent continuous
+        state (allocator, prefix cache, paged KV) between serve calls.
+        In-flight snapshots — scheduler queues, partial outputs — are
+        taken automatically by the serve loop at iteration boundaries
+        when ``snapshot_every`` is set; this manual hook has no live
+        scheduler to capture.  Continuous mode only."""
+        if self._resolve_prefill_mode() != "continuous":
+            raise ValueError(
+                "snapshots capture paged serving state: requires "
+                "prefill_mode='continuous'"
             )
-            sched.commit(plan, np.asarray(sampled), ok=np.asarray(ok))
-        cont["cache"] = cache
-        self._merge_health(sched.stats())
+        return self._snapshot_now(None, ckpt_dir)
+
+    def load_snapshot(
+        self, ckpt_dir: Optional[str] = None, step: Optional[int] = None
+    ) -> int:
+        """Warm restore: load a published snapshot into THIS engine,
+        replacing its continuous-mode state while keeping its compiled
+        traces (weights are untouched — snapshots never store them).
+        The snapshot's serve config must match this engine's except for
+        the free knobs (:data:`_SNAP_FREE_KNOBS`).  If the snapshot held
+        in-flight requests, :meth:`resume` finishes them.  Returns the
+        loaded step number."""
+        scfg = self.scfg
+        path = ckpt_dir or scfg.snapshot_dir
+        if path is None:
+            raise ValueError(
+                "no snapshot source: set ServeConfig.snapshot_dir or "
+                "pass ckpt_dir"
+            )
+        manifest = checkpoint.load_manifest(path, step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "engine_snapshot":
+            raise checkpoint.CheckpointError(
+                f"step {manifest['step']} in {path} is not an engine "
+                f"snapshot (kind={extra.get('kind')!r})"
+            )
+        if extra.get("snapshot_version") != 1:
+            raise checkpoint.CheckpointError(
+                "unsupported engine snapshot version "
+                f"{extra.get('snapshot_version')!r}"
+            )
+        saved = dict(extra["serve_config"])
+        mine = dataclasses.asdict(scfg)
+        for key in self._SNAP_FREE_KNOBS:
+            saved.pop(key, None)
+            mine.pop(key, None)
+        if saved != mine:
+            diff = sorted(
+                key for key in set(saved) | set(mine)
+                if saved.get(key) != mine.get(key)
+            )
+            raise checkpoint.CheckpointError(
+                "snapshot serve config does not match this engine "
+                f"(differing keys: {diff}) — restore with the saved "
+                "config (Engine.restore does this by default)"
+            )
+        like = lm.paged_cache_template(
+            self.cfg, scfg.total_pages, scfg.page_size
+        )
+        host_cache, manifest = checkpoint.restore(
+            path, like, step=manifest["step"]
+        )
+        allocator = paged_cache.PageAllocator.from_state(extra["allocator"])
+        if self._injector is not None:
+            allocator.fault_hook = self._injector.alloc_hook
+        prefix = (
+            None if extra["prefix"] is None
+            else paged_cache.PrefixCache.from_state(
+                allocator, extra["prefix"]
+            )
+        )
+        self._cont = {
+            "allocator": allocator,
+            "prefix": prefix,
+            "cache": lm.restore_decode_state(host_cache),
+        }
+        eng = extra["engine"]
+        self._rid = int(eng["rid"])
+        self.fallbacks = int(eng["fallbacks"])
+        self._health = dict(eng["health"])
+        self._resume_state = extra["scheduler"]  # None if engine-level
+        self._snap_step = int(manifest["step"]) + 1
+        self._last_snap_iter = None
+        return int(manifest["step"])
+
+    @classmethod
+    def restore(
+        cls,
+        ckpt_dir: str,
+        params,
+        cfg,
+        scfg: Optional[ServeConfig] = None,
+        step: Optional[int] = None,
+    ) -> "Engine":
+        """Cold restore: rebuild a fresh engine from the latest (or
+        ``step``-th) published snapshot — re-jit, re-pack weights from
+        the RAW ``params``/``cfg`` the caller holds (snapshots store
+        serving state, never weights), reload allocator/prefix/KV state,
+        and stage any in-flight requests for :meth:`resume`.
+
+        ``scfg`` defaults to the snapshot's own serve config; pass an
+        override only to change the free knobs (snapshot destination,
+        cadence, watchdog threshold) — anything else fails the
+        config-match check."""
+        manifest = checkpoint.load_manifest(ckpt_dir, step)
+        if scfg is None:
+            scfg = cls._scfg_from_state(
+                manifest["extra"]["serve_config"]
+            )
+        engine = cls(params, cfg, scfg)
+        engine.load_snapshot(ckpt_dir, step=manifest["step"])
+        return engine
+
+    def resume(self, on_token=None, delivered=None) -> List[RequestResult]:
+        """Finish every in-flight request staged by ``load_snapshot``/
+        ``restore``, byte-identical to the uninterrupted run (replay
+        re-derives post-snapshot tokens exactly: sampling keys depend
+        only on seed + fed-stream position).  Returns results ordered by
+        rid.
+
+        ``on_token`` re-attaches streaming callbacks (callbacks are
+        process-local and never serialized): one callable for all
+        requests or a ``{rid: callable}`` dict.  ``delivered`` is an
+        optional ``{rid: n}`` dict of how many output tokens the
+        CONSUMER actually received before the crash — the stream resumes
+        at the first undelivered token, no duplicates, no gaps.  Without
+        it, delivery resumes from the snapshot's own count (tokens
+        streamed between the snapshot and the crash are then re-sent:
+        at-least-once; with consumer truth: exactly-once)."""
+        if self._resume_state is None:
+            raise RuntimeError(
+                "nothing to resume: the loaded snapshot held no in-flight "
+                "requests (or resume() already ran)"
+            )
+        state = self._resume_state
+        self._resume_state = None
+        sched = self._make_scheduler()
+        reqs = sched.load_state(state)
+        for req in reqs:
+            if callable(on_token):
+                req.on_token = on_token
+            elif on_token is not None:
+                req.on_token = on_token.get(req.rid)
+            if delivered is not None and req.rid in delivered:
+                req.streamed = int(delivered[req.rid])
+        self._run_loop(sched)
+        return [self._result(req) for req in reqs]

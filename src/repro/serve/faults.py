@@ -34,6 +34,13 @@ Four hooks, all driven by one ``numpy`` PRNG seeded from
   scrubbed inside the jitted step before its first write — so corrupted
   free pages must never influence any output byte.
 
+A fifth hook simulates *process death* rather than a survivable fault:
+**kill points** (``kill_at`` / ``kill_point``) raise
+:class:`SimulatedCrash` at a named site in the serve loop (see
+:data:`KILL_POINTS`).  The engine never catches it — recovery is only
+via ``Engine.restore`` from the last published snapshot, which is
+exactly the contract the durability chaos tests exercise.
+
 The fused-kernel hook is reached from kernel code, which must not know
 about engines, so it reads a module-level *scoped* injector: the engine
 activates its injector only around its own jitted dispatches
@@ -61,6 +68,29 @@ class FusedKernelFault(FaultError):
     """Injected fused paged-attention kernel failure."""
 
 
+class SimulatedCrash(FaultError):
+    """Simulated SIGKILL: the engine process "dies" here.
+
+    Unlike every other injected fault, the engine must NOT handle this —
+    it propagates out of the serve loop, leaving whatever host/device
+    state existed at the kill point behind, exactly like a real process
+    death.  Recovery is only via ``Engine.restore`` from the last
+    *published* snapshot (tests treat the killed engine object as gone).
+    """
+
+
+#: Named kill sites, in loop order (see Engine._run_loop):
+#: * ``iteration`` — the iteration boundary, before plan(); the only
+#:   point where snapshots are taken, so state is maximally consistent.
+#: * ``pre_commit`` — after the jitted dispatch, before the scheduler
+#:   commit: device KV planes already advanced, host bookkeeping has
+#:   not — the classic torn state a snapshot must never capture.
+#: * ``mid_save`` — inside ``checkpoint.manager.save`` after the tmp
+#:   dir is written but before the atomic rename: the crash leaves a
+#:   ``.tmp`` dir that restore ignores and the next save sweeps.
+KILL_POINTS = ("iteration", "pre_commit", "mid_save")
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultConfig:
     """What to inject, and with which seed (see module docstring)."""
@@ -78,12 +108,24 @@ class FaultConfig:
     # the engine must quarantine exactly that row, with co-batched
     # healthy rows byte-identical to a fault-free run
     nan_draft_rids: Tuple[int, ...] = ()
+    # SIGKILL simulation: on the ``kill_at``-th visit to the ``kill_point``
+    # site, raise SimulatedCrash (None = never).  Counting visits (not
+    # iterations) keeps the knob meaningful at every site, including
+    # mid_save which only runs when a snapshot is being written.
+    kill_at: Optional[int] = None
+    kill_point: str = "iteration"
 
     def __post_init__(self):
         for name in ("alloc_fail_p", "scrub_corrupt_p"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.kill_point not in KILL_POINTS:
+            raise ValueError(
+                f"kill_point must be one of {KILL_POINTS}, got {self.kill_point!r}"
+            )
+        if self.kill_at is not None and self.kill_at < 1:
+            raise ValueError(f"kill_at must be >= 1, got {self.kill_at}")
 
 
 class FaultInjector:
@@ -105,6 +147,27 @@ class FaultInjector:
         self.nan_poisons = 0
         self.draft_nan_poisons = 0
         self.scribbles = 0
+        self.kills = 0
+        self._kill_countdown = cfg.kill_at
+
+    # --------------------------------------------------------- kill points
+
+    def maybe_kill(self, site: str) -> None:
+        """Raise :class:`SimulatedCrash` on the ``kill_at``-th visit to
+        the configured kill site.  Called by the engine loop (sites
+        ``iteration`` / ``pre_commit``) and, via the snapshot writer's
+        ``pre_publish_hook``, from inside the checkpoint save
+        (``mid_save``)."""
+        if self._kill_countdown is None or site != self.cfg.kill_point:
+            return
+        self._kill_countdown -= 1
+        if self._kill_countdown <= 0:
+            self._kill_countdown = None  # one death per injector
+            self.kills += 1
+            raise SimulatedCrash(
+                f"simulated SIGKILL at kill point {site!r} "
+                f"(kill_at={self.cfg.kill_at}, seed={self.cfg.seed})"
+            )
 
     # ------------------------------------------------------ allocator hook
 

@@ -274,6 +274,44 @@ class PageAllocator:
         self._free.append(page)
         self._dirty.add(page)
 
+    # ------------------------------------------------- snapshot (durability)
+
+    def export_state(self) -> dict:
+        """JSON-able snapshot of the full allocator state.
+
+        The free list is exported *in order*: ``.pop()`` order determines
+        which physical page each future allocation lands on, so restoring
+        it exactly is what makes post-restore execution byte-identical to
+        the uninterrupted run (pages are content-addressed nowhere — the
+        page id itself flows into jitted page tables)."""
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "free": list(self._free),
+            "tables": [[rid, list(t)] for rid, t in self._tables.items()],
+            "refs": [[p, r] for p, r in self._refs.items()],
+            "dirty": sorted(self._dirty),
+            "cow_count": self.cow_count,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PageAllocator":
+        """Rebuild an allocator from :meth:`export_state` output (possibly
+        round-tripped through JSON).  ``fault_hook`` does not survive —
+        injectors are per-process by design."""
+        a = cls(int(state["n_pages"]), int(state["page_size"]))
+        a._free = [int(p) for p in state["free"]]
+        a._tables = {rid: [int(p) for p in t] for rid, t in state["tables"]}
+        a._refs = {int(p): int(r) for p, r in state["refs"]}
+        a._dirty = set(int(p) for p in state["dirty"])
+        a.cow_count = int(state["cow_count"])
+        live = set(a._refs)
+        if set(a._free) & live or NULL_PAGE in live or NULL_PAGE in a._free:
+            raise ValueError("corrupt allocator snapshot: free/live overlap")
+        if set(a._free) | live != set(range(1, a.n_pages)):
+            raise ValueError("corrupt allocator snapshot: pages leaked or invented")
+        return a
+
 
 # ------------------------------------------------------ shared-prefix cache
 
@@ -387,6 +425,46 @@ class PrefixCache:
             "prefill_tokens_saved": self.tokens_saved,
             "tokens_saved_ratio": self.tokens_saved / max(1, self.tokens_total),
         }
+
+    # ------------------------------------------------- snapshot (durability)
+
+    def export_state(self) -> dict:
+        """JSON-able snapshot: entries in LRU→MRU order (eviction order is
+        part of the deterministic-replay contract) plus lifetime stats."""
+        return {
+            "entries": [[h, p] for h, p in self._entries.items()],
+            "page_lookups": self.page_lookups,
+            "page_hits": self.page_hits,
+            "insertions": self.insertions,
+            "evictions": self.evictions,
+            "tokens_total": self.tokens_total,
+            "tokens_saved": self.tokens_saved,
+        }
+
+    @classmethod
+    def from_state(cls, allocator: PageAllocator, state: dict) -> "PrefixCache":
+        """Rebuild over an allocator restored from the *same* snapshot.
+        The cache's holds are already counted in the allocator's exported
+        refcounts, so no new holds are taken here (taking them again
+        would leak one reference per entry)."""
+        pc = cls(allocator)
+        for h, p in state["entries"]:
+            page = int(p)
+            if allocator.refcount(page) < 1:
+                raise ValueError(
+                    f"corrupt prefix snapshot: entry on non-live page {page}"
+                )
+            pc._entries[h] = page
+        for k in (
+            "page_lookups",
+            "page_hits",
+            "insertions",
+            "evictions",
+            "tokens_total",
+            "tokens_saved",
+        ):
+            setattr(pc, k, int(state[k]))
+        return pc
 
 
 # -------------------------------------------------------------- cache state

@@ -91,7 +91,8 @@ runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -167,6 +168,19 @@ class Request:
     hashes: Optional[List[str]] = None  # chained full-page prompt hashes
     reg_pages: int = 0  # prompt pages already published to the cache
     cow_reserved: int = 0  # admission-reserved CoW pages (full-prefix hit)
+    # -- streaming delivery --
+    # called as on_token(rid, tokens, start) with each newly COMMITTED
+    # run of tokens (tokens == out[start:start+len(tokens)]); commit paths
+    # apply stop/spec/watchdog truncation BEFORE extending `out`, so a
+    # streamed token is never rewound.  Not serialized — a restored
+    # engine re-attaches callbacks via Engine.resume(on_token=...).
+    on_token: Optional[Callable] = None
+    streamed: int = 0  # tokens of `out` already delivered via on_token
+    # -- latency clock (host wall time, time.monotonic seconds) --
+    t_enqueue: float = 0.0  # Scheduler.add
+    t_admit: float = 0.0  # first admission to a batch row
+    t_first: float = 0.0  # first committed output token
+    t_finish: float = 0.0  # terminal outcome recorded
 
     @property
     def prompt_len(self) -> int:
@@ -198,6 +212,82 @@ class Request:
         return np.concatenate(
             [self.prompt, np.asarray(self.out, np.int32)]
         ).astype(np.int32)
+
+
+# --------------------------------------------- request snapshot (durability)
+
+
+def request_state(req: Request) -> dict:
+    """JSON-able snapshot of one request's full logical state.
+
+    This is everything needed to resume the request byte-exactly:
+    sampling keys derive from (seed, fed-stream position) and the fed
+    stream is ``prompt ‖ out[:-1]``, so prompt + out + sampling + stop
+    set + progress counters determine every future token.  ``on_token``
+    callbacks are process-local and deliberately not captured
+    (``streamed`` is, so a resumed stream starts at the first
+    undelivered token)."""
+    return {
+        "rid": int(req.rid),
+        "prompt": [int(t) for t in req.prompt],
+        "max_new_tokens": int(req.max_new_tokens),
+        "arrival": int(req.arrival),
+        "deadline": req.deadline,
+        "cancel_at": req.cancel_at,
+        "sampling": dataclasses.asdict(req.sampling),
+        "stop_tokens": (
+            sorted(int(t) for t in req.stop_tokens)
+            if req.stop_tokens is not None
+            else None
+        ),
+        "computed": int(req.computed),
+        "out": [int(t) for t in req.out],
+        "state": req.state,
+        "slot": req.slot,
+        "finish_reason": req.finish_reason,
+        "preemptions": int(req.preemptions),
+        "committed": int(req.committed),
+        "admitted_at": int(req.admitted_at),
+        "wait_since": int(req.wait_since),
+        "cancelled": bool(req.cancelled),
+        "hashes": list(req.hashes) if req.hashes is not None else None,
+        "reg_pages": int(req.reg_pages),
+        "cow_reserved": int(req.cow_reserved),
+        "streamed": int(req.streamed),
+    }
+
+
+def request_from_state(d: dict) -> Request:
+    """Rebuild a :class:`Request` from :func:`request_state` output."""
+    req = Request(
+        rid=int(d["rid"]),
+        prompt=np.asarray(d["prompt"], np.int32),
+        max_new_tokens=int(d["max_new_tokens"]),
+        arrival=int(d["arrival"]),
+        deadline=d["deadline"],
+        cancel_at=d["cancel_at"],
+        sampling=SamplingParams(**d["sampling"]),
+        stop_tokens=(
+            frozenset(d["stop_tokens"])
+            if d["stop_tokens"] is not None
+            else None
+        ),
+    )
+    req.computed = int(d["computed"])
+    req.out = [int(t) for t in d["out"]]
+    req.state = d["state"]
+    req.slot = d["slot"]
+    req.finish_reason = d["finish_reason"]
+    req.preemptions = int(d["preemptions"])
+    req.committed = int(d["committed"])
+    req.admitted_at = int(d["admitted_at"])
+    req.wait_since = int(d["wait_since"])
+    req.cancelled = bool(d["cancelled"])
+    req.hashes = list(d["hashes"]) if d["hashes"] is not None else None
+    req.reg_pages = int(d["reg_pages"])
+    req.cow_reserved = int(d["cow_reserved"])
+    req.streamed = int(d["streamed"])
+    return req
 
 
 @dataclasses.dataclass
@@ -362,6 +452,8 @@ class Scheduler:
                 f"{req.max_new_tokens} new tokens needs {need} pages, page "
                 f"table holds {self.max_pages_per_req} (page_size {ps})"
             )
+        if req.t_enqueue == 0.0:
+            req.t_enqueue = time.monotonic()
         self.pending.append(req)
 
     def cancel(self, rid: int) -> bool:
@@ -395,6 +487,82 @@ class Scheduler:
             out[f"finished_{reason}"] = self.finished_by_reason.get(reason, 0)
         return out
 
+    # ------------------------------------------------- snapshot (durability)
+
+    def export_state(self) -> dict:
+        """JSON-able scheduler state at an ITERATION BOUNDARY — every
+        commit applied, no plan outstanding.  The persistent plan buffers
+        are deliberately NOT captured: they are pure functions of page
+        tables + request state and are rebuilt on the first post-restore
+        plan (every ``_table_stale`` row starts True in a fresh
+        scheduler).  Only in-flight requests are exported; finished ones
+        already live in their ``RequestResult``."""
+        reqs = (
+            list(self.pending)
+            + list(self.queue)
+            + [r for r in self.slots if r is not None]
+        )
+        return {
+            "iteration": int(self.iteration),
+            "committed": int(self._committed),
+            "preemptions": int(self.preemptions),
+            "preemptions_fault": int(self.preemptions_fault),
+            "quarantines": int(self.quarantines),
+            "queue_high_water": int(self.queue_high_water),
+            "finished_by_reason": dict(self.finished_by_reason),
+            "slots": [r.rid if r is not None else None for r in self.slots],
+            "queue": [r.rid for r in self.queue],
+            "pending": [r.rid for r in self.pending],
+            "requests": [request_state(r) for r in reqs],
+        }
+
+    def load_state(self, state: dict) -> List[Request]:
+        """Rebuild :meth:`export_state` output into this (freshly built,
+        empty) scheduler.  The bound allocator must come from the SAME
+        snapshot — running rows are cross-checked against its page
+        tables.  Returns the restored requests ordered by rid (the
+        engine's resume-result order)."""
+        if self.has_work() or self.iteration != 0:
+            raise SchedulerInvariantError(
+                "load_state requires a fresh scheduler (it has work or a "
+                "non-zero iteration clock)"
+            )
+        if len(state["slots"]) != self.max_batch:
+            raise SchedulerInvariantError(
+                f"snapshot has {len(state['slots'])} batch rows, scheduler "
+                f"has {self.max_batch} — ServeConfig mismatch"
+            )
+        by_rid: Dict[int, Request] = {}
+        for d in state["requests"]:
+            req = request_from_state(d)
+            by_rid[req.rid] = req
+        self.iteration = int(state["iteration"])
+        self._committed = int(state["committed"])
+        self.preemptions = int(state["preemptions"])
+        self.preemptions_fault = int(state["preemptions_fault"])
+        self.quarantines = int(state["quarantines"])
+        self.queue_high_water = int(state["queue_high_water"])
+        self.finished_by_reason = dict(state["finished_by_reason"])
+        self.pending = [by_rid[rid] for rid in state["pending"]]
+        self.queue = [by_rid[rid] for rid in state["queue"]]
+        live = set(self.allocator.live())
+        for slot, rid in enumerate(state["slots"]):
+            if rid is None:
+                continue
+            req = by_rid[rid]
+            if req.state != RUNNING or req.slot != slot:
+                raise SchedulerInvariantError(
+                    f"snapshot slot {slot} disagrees with request {rid} "
+                    f"(state={req.state!r}, slot={req.slot})"
+                )
+            if rid not in live:
+                raise SchedulerInvariantError(
+                    f"running request {rid} has no page table in the "
+                    f"restored allocator"
+                )
+            self.slots[slot] = req
+        return [by_rid[rid] for rid in sorted(by_rid)]
+
     # ------------------------------------------------- abort / preempt paths
 
     def _abort(self, req: Request, reason: str) -> None:
@@ -415,6 +583,7 @@ class Scheduler:
         req.state = FINISHED
         req.slot = None
         req.finish_reason = reason
+        req.t_finish = time.monotonic()
         self.finished_by_reason[reason] = (
             self.finished_by_reason.get(reason, 0) + 1
         )
@@ -602,6 +771,8 @@ class Scheduler:
             pick.state = RUNNING
             pick.slot = slot
             pick.admitted_at = self.iteration
+            if pick.t_admit == 0.0:
+                pick.t_admit = time.monotonic()
             self.slots[slot] = pick
             self._table_stale[slot] = True
         if all(s is None for s in self.slots) and self.queue:
@@ -888,6 +1059,7 @@ class Scheduler:
         req.state = FINISHED
         req.slot = None
         req.finish_reason = reason
+        req.t_finish = time.monotonic()
         self.finished_by_reason[reason] = (
             self.finished_by_reason.get(reason, 0) + 1
         )
@@ -896,6 +1068,22 @@ class Scheduler:
         req.committed = 0
         self.slots[slot] = None
         self._table_stale[slot] = True
+
+    def _note_progress(self, req: Request) -> None:
+        """Post-commit per-row bookkeeping: stamp the first-token clock
+        and flush newly committed tokens to the request's streaming
+        callback.  Called only AFTER a commit path has applied its
+        truncation (stop rewind / spec acceptance / watchdog cut) to
+        ``req.out`` — the streamed sequence is therefore always a prefix
+        of the final output, never speculated past a rewind."""
+        if req.t_first == 0.0 and req.out:
+            req.t_first = time.monotonic()
+        cb = req.on_token
+        if cb is not None and len(req.out) > req.streamed:
+            start = req.streamed
+            new = [int(t) for t in req.out[start:]]
+            req.streamed = len(req.out)
+            cb(req.rid, new, start)
 
     def _quarantine(self, slot: int, req: Request) -> None:
         """The engine's watchdog saw non-finite logits on this row: free
@@ -929,13 +1117,14 @@ class Scheduler:
             if plan.sample_mask[slot]:
                 if ok is not None and not bool(ok[slot]):
                     self._quarantine(slot, req)
-                    continue
-                tok = int(sampled[slot])
-                req.out.append(tok)
-                if req.stop_tokens and tok in req.stop_tokens:
-                    self._finish(slot, req, FINISH_STOP)
-                elif len(req.out) >= req.max_new_tokens:
-                    self._finish(slot, req, FINISH_LENGTH)
+                else:
+                    tok = int(sampled[slot])
+                    req.out.append(tok)
+                    if req.stop_tokens and tok in req.stop_tokens:
+                        self._finish(slot, req, FINISH_STOP)
+                    elif len(req.out) >= req.max_new_tokens:
+                        self._finish(slot, req, FINISH_LENGTH)
+            self._note_progress(req)
 
     def commit_run(
         self,
@@ -985,6 +1174,7 @@ class Scheduler:
                 req.computed += bad
                 req.out.extend(int(x) for x in sampled[slot, :bad])
                 self._quarantine(slot, req)
+                self._note_progress(req)
                 continue
             req.computed += trunc
             req.out.extend(int(x) for x in sampled[slot, :trunc])
@@ -993,6 +1183,7 @@ class Scheduler:
                 self._finish(slot, req, FINISH_STOP)
             elif len(req.out) >= req.max_new_tokens:
                 self._finish(slot, req, FINISH_LENGTH)
+            self._note_progress(req)
 
     def commit_spec(
         self,
@@ -1048,14 +1239,18 @@ class Scheduler:
             advance = max(advance, n_keep)
             if bad:
                 self._quarantine(slot, req)
+                self._note_progress(req)
                 continue
             self._register_prefix(req)
             if stopped:
                 self._finish(slot, req, FINISH_STOP)
+                self._note_progress(req)
                 continue
             if len(req.out) >= req.max_new_tokens:
                 self._finish(slot, req, FINISH_LENGTH)
+                self._note_progress(req)
                 continue
+            self._note_progress(req)
             # row survives: roll rejected-suffix pages back to the pool
             dropped = self.allocator.truncate_to(req.rid, req.computed)
             if dropped:

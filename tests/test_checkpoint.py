@@ -1,0 +1,101 @@
+"""checkpoint/manager.py failure-path tests: atomic tmp-rename publish,
+stale-``.tmp`` hygiene after a mid-save crash, keep-k GC with milestone
+retention, and loud structural rejection on restore mismatch."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager
+
+
+def _tree(x=0.0):
+    return {
+        "a": np.full((2, 3), 1.0 + x, np.float32),
+        "b": {"c": np.arange(4, dtype=np.int32)},
+    }
+
+
+def test_save_restore_roundtrip_with_extra(tmp_path):
+    d = str(tmp_path)
+    manager.save(d, 3, _tree(1.5), extra={"k": [1, 2], "name": "x"})
+    tree, man = manager.restore(d, _tree())
+    np.testing.assert_array_equal(tree["a"], _tree(1.5)["a"])
+    np.testing.assert_array_equal(tree["b"]["c"], _tree()["b"]["c"])
+    assert man["step"] == 3
+    assert man["extra"] == {"k": [1, 2], "name": "x"}
+    # manifest readable without building a like_tree first
+    assert manager.load_manifest(d)["extra"]["name"] == "x"
+
+
+def test_mid_save_crash_tmp_ignored_and_swept(tmp_path):
+    """A crash between writing the tmp dir and the atomic rename leaves
+    ``step_N.tmp``: restore must ignore it (latest published wins) and
+    the next successful save must sweep it."""
+    d = str(tmp_path)
+    manager.save(d, 1, _tree(1.0))
+
+    class Boom(RuntimeError):
+        pass
+
+    def crash():
+        raise Boom("simulated death inside save")
+
+    with pytest.raises(Boom):
+        manager.save(d, 2, _tree(2.0), pre_publish_hook=crash)
+    names = set(os.listdir(d))
+    assert "step_00000002.tmp" in names
+    assert "step_00000002" not in names
+    # the orphan is invisible to every read path
+    assert manager.all_steps(d) == [1]
+    tree, man = manager.restore(d, _tree())
+    assert man["step"] == 1
+    np.testing.assert_array_equal(tree["a"], _tree(1.0)["a"])
+    # ... and the next save sweeps it
+    manager.save(d, 3, _tree(3.0))
+    names = set(os.listdir(d))
+    assert not any(n.endswith(".tmp") for n in names)
+    assert manager.latest_step(d) == 3
+
+
+def test_keep_k_gc_retains_milestones(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 11):
+        manager.save(d, s, _tree(float(s)), keep=3, milestone_every=5)
+    # keep-window [8, 9, 10] plus milestones 5 and 10
+    assert manager.all_steps(d) == [5, 8, 9, 10]
+    # milestones restore like any published step
+    tree, _ = manager.restore(d, _tree(), step=5)
+    np.testing.assert_array_equal(tree["a"], _tree(5.0)["a"])
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    d = str(tmp_path)
+    manager.save(d, 1, _tree())
+    with pytest.raises(manager.CheckpointError, match="leaves"):
+        manager.restore(d, {"a": np.zeros((2, 3), np.float32)})
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path)
+    manager.save(d, 1, _tree())
+    bad = _tree()
+    bad["a"] = np.zeros((5,), np.float32)
+    with pytest.raises(manager.CheckpointError, match="shape"):
+        manager.restore(d, bad)
+
+
+def test_restore_rejects_missing_leaf_file(tmp_path):
+    d = str(tmp_path)
+    manager.save(d, 1, _tree())
+    os.remove(os.path.join(d, "step_00000001", "leaf_00001.npy"))
+    with pytest.raises(manager.CheckpointError, match="missing leaf"):
+        manager.restore(d, _tree())
+
+
+def test_empty_dir_raises_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        manager.load_manifest(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        manager.restore(str(tmp_path), _tree())

@@ -524,3 +524,60 @@ def test_chaos_fuzz_zero_exceptions_healthy_rows_exact():
     for r, want in zip(fres, fref):
         assert r.finish_reason == FINISH_LENGTH
         np.testing.assert_array_equal(r.tokens, want)
+
+
+# ------------------------------------------------------- kill points
+
+
+def test_kill_point_config_validation():
+    with pytest.raises(ValueError, match="kill_point"):
+        faults.FaultConfig(kill_at=1, kill_point="bogus")
+    with pytest.raises(ValueError, match="kill_at"):
+        faults.FaultConfig(kill_at=0)
+    # all documented sites are accepted
+    for site in faults.KILL_POINTS:
+        faults.FaultConfig(kill_at=1, kill_point=site)
+
+
+def test_simulated_crash_propagates_and_fires_once():
+    """A kill point is a process death, not a request outcome: it must
+    escape the serving loop uncaught (fault isolation swallows request
+    faults, never SimulatedCrash), and one injector kills exactly once."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5), seed=5)
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", prefill_chunk=4, max_seq=24,
+        page_size=4, max_batch=2, max_pages=11,
+    ))
+    eng.set_faults(faults.FaultConfig(seed=0, kill_at=2,
+                                      kill_point="pre_commit"))
+    with pytest.raises(faults.SimulatedCrash):
+        eng.generate_requests(prompts, 6)
+    inj = eng._injector
+    assert inj.kills == 1
+    assert eng.health()["injected_kills"] == 1
+    # the countdown is expended: the dead process never dies twice
+    inj.maybe_kill("pre_commit")
+    assert inj.kills == 1
+
+
+def test_kill_sites_are_reached():
+    """Each kill site fires on a vanilla continuous run (mid_save needs
+    a snapshot cadence) — guards against a site silently unwired."""
+    import tempfile
+
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _mixed_prompts(cfg.vocab, (9, 5), seed=5)
+    for site in faults.KILL_POINTS:
+        with tempfile.TemporaryDirectory() as d:
+            eng = Engine(params, cfg, ServeConfig(
+                prefill_mode="continuous", prefill_chunk=4, max_seq=24,
+                page_size=4, max_batch=2, max_pages=11,
+                snapshot_dir=d, snapshot_every=1,
+            ))
+            eng.set_faults(faults.FaultConfig(seed=0, kill_at=1,
+                                              kill_point=site))
+            with pytest.raises(faults.SimulatedCrash, match=site):
+                eng.generate_requests(prompts, 6)

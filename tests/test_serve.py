@@ -816,3 +816,89 @@ def test_decode_block_one_matches_larger_blocks():
     out_16 = Engine(params, cfg, ServeConfig(decode_block=16, **kw)).generate_requests(prompts, 6)
     for a, b in zip(out_1, out_16):
         np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------------------- streaming
+
+
+def _collect_stream(store, rid, toks, start):
+    buf = store.setdefault(rid, [])
+    assert start == len(buf), (rid, start, len(buf))
+    buf.extend(int(t) for t in toks)
+
+
+def test_streaming_matches_final_output():
+    """``on_token`` delivers exactly the committed output stream —
+    in-order, gapless, byte-equal to the final tokens — and honors
+    per-request callbacks including ``None`` holes."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prefix_workload(cfg.vocab)
+    eng = Engine(params, cfg, ServeConfig(
+        temperature=0.8, seed=5, **_serve_kwargs("native", "native")
+    ))
+    streamed = {}
+
+    def cb(rid, toks, start):
+        _collect_stream(streamed, rid, toks, start)
+
+    res = eng.serve_requests(prompts, 8, on_token=[cb, None, cb])
+    assert sorted(streamed) == sorted([res[0].rid, res[2].rid])
+    for r in (res[0], res[2]):
+        gen = [int(t) for t in r.tokens[len(r.tokens) - r.n_generated:]]
+        assert streamed[r.rid] == gen
+
+
+def test_streaming_survives_preempt_and_recompute():
+    """A preempted-and-recomputed request re-derives the same bytes and
+    streams only PAST what it already delivered: the consumer never sees
+    a rewind, a duplicate, or a gap."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, cfg.vocab, (s,)).astype(np.int32)
+        for s in (9, 5, 12, 7)
+    ]
+    eng = Engine(params, cfg, ServeConfig(
+        prefill_mode="continuous", prefill_chunk=4, max_seq=24,
+        page_size=4, max_batch=3, max_pages=13, preempt_after=2,
+    ))
+    streamed = {}
+    res = eng.serve_requests(
+        prompts, 10,
+        on_token=lambda rid, t, s: _collect_stream(streamed, rid, t, s),
+    )
+    assert eng.health()["preemptions"] > 0, "pool never forced a preempt"
+    for r in res:
+        gen = [int(t) for t in r.tokens[len(r.tokens) - r.n_generated:]]
+        assert streamed.get(r.rid, []) == gen
+
+
+def test_streaming_stops_at_stop_token():
+    """Committed tokens are post-truncation: the stream ends exactly at
+    the stop token, never leaking sampled-but-discarded tail tokens."""
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = _prefix_workload(cfg.vocab)
+    kw = _serve_kwargs("native", "native")
+    ref = Engine(params, cfg, ServeConfig(**kw)).generate_requests(prompts, 8)
+    gen0 = [int(t) for t in ref[0][len(prompts[0]):]]
+    stop = gen0[3]
+    eng = Engine(params, cfg, ServeConfig(**kw))
+    streamed = {}
+    res = eng.serve_requests(
+        prompts, 8, stop_tokens=[[stop], [], []],
+        on_token=lambda rid, t, s: _collect_stream(streamed, rid, t, s),
+    )
+    r0 = res[0]
+    assert r0.finish_reason == "stop"
+    assert streamed[r0.rid] == gen0[: gen0.index(stop) + 1]
+
+
+def test_streaming_rejects_non_callable():
+    cfg = small_cfg()
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, ServeConfig(**_serve_kwargs("native", "native")))
+    with pytest.raises(ValueError, match="on_token"):
+        eng.generate_requests(_prefix_workload(cfg.vocab), 4, on_token=42)

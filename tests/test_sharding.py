@@ -76,7 +76,7 @@ def test_checkpoint_shape_mismatch_rejected():
     with tempfile.TemporaryDirectory() as td:
         ckpt.save(td, 1, tree)
         bad = {"a": jnp.zeros((5,))}
-        with pytest.raises(AssertionError):
+        with pytest.raises(ckpt.CheckpointError):
             ckpt.restore(td, bad)
 
 
